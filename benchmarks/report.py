@@ -1,0 +1,67 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json and results/roofline/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob("results/dryrun/*__pod*.json")):
+        name = os.path.basename(path)[:-5]
+        if ".rep" in name or ".unroll" in name or "." in name.split("__")[-1][4:]:
+            continue
+        rec = json.load(open(path))
+        if "skipped" in rec:
+            rows.append((rec["arch"], rec["shape"], rec["mesh"], "SKIP",
+                         "-", "-", "-", "-"))
+            continue
+        mem = rec["memory_analysis"]
+        coll = sum(rec["collectives"]["bytes"].values())
+        rows.append((
+            rec["arch"], rec["shape"], rec["mesh"], "OK",
+            _fmt_bytes(mem.get("argument_size_in_bytes")),
+            _fmt_bytes(mem.get("temp_size_in_bytes")),
+            f"{coll/2**30:.2f}",
+            f"{rec['timing']['compile_s']:.0f}s",
+        ))
+    out = ["| arch | shape | mesh | status | args GiB/dev | temps GiB/dev | "
+           "collective GiB/dev | compile |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob("results/roofline/*.json")):
+        rec = json.load(open(path))
+        if rec.get("skipped"):
+            out.append(f"| {rec['arch']} | {rec['shape']} | - | - | - | "
+                       f"skip | - | - |")
+            continue
+        t = rec["terms"]
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | {t['dominant']} | "
+            f"{rec['useful_compute_ratio']:.2f} | {rec['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

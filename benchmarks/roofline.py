@@ -1,0 +1,177 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per device, TPU v5e constants):
+  compute    = HLO_FLOPs / peak_FLOPs            (197e12 bf16 FLOP/s/chip)
+  memory     = HLO_bytes / HBM_bw                (819e9 B/s/chip)
+  collective = collective_bytes / link_bw        (~50e9 B/s/link ICI)
+
+cost_analysis does NOT multiply scan/while bodies by their trip counts, so
+per-cell costs are obtained by *depth extrapolation*: the model is lowered
+unrolled at 1 and 2 pattern-repeats; per-repeat cost = f(2) - f(1);
+total = f(1) + (n_repeats - 1) * (f(2) - f(1)).  The production scanned
+artifact (results/dryrun/*.json) supplies memory_analysis + the compile
+proof; this tool supplies the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline --all        # build table
+  PYTHONPATH=src python -m benchmarks.roofline --arch X --shape Y
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+OUT = "results/dryrun"
+ROOF = "results/roofline"
+
+
+def _cell_path(arch, shape, tag=""):
+    suffix = f".{tag}" if tag else ""
+    return f"{OUT}/{arch}__{shape}__pod1{suffix}.json"
+
+
+def _run_dryrun(arch, shape, extra, tag):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT, "--tag", tag] + extra
+    subprocess.run(cmd, check=True, env=env)
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _cost(rec):
+    c = rec["cost_analysis"]
+    flops = c.get("flops", 0.0)
+    byts = c.get("bytes accessed", 0.0)
+    coll = sum(rec["collectives"]["bytes"].values())
+    return flops, byts, coll
+
+
+def extrapolated_costs(arch, shape):
+    """flops/bytes/collective per device via 1-vs-2-repeat unrolled lowering."""
+    from repro.configs import get_config
+    from repro.models.model import layer_descriptors
+
+    cfg = get_config(arch)
+    prefix, pattern = layer_descriptors(cfg)
+    plen = len(pattern)
+    n_rep = (cfg.n_layers - len(prefix)) // plen
+
+    recs = {}
+    for k in (1, 2):
+        tag = f"rep{k}"
+        path = _cell_path(arch, shape, tag)
+        if not os.path.exists(path):
+            _run_dryrun(
+                arch, shape,
+                ["--unroll", "--layers", str(len(prefix) + k * plen)], tag,
+            )
+        recs[k] = _load(path)
+    f1, b1, c1 = _cost(recs[1])
+    f2, b2, c2 = _cost(recs[2])
+    flops = f1 + (n_rep - 1) * (f2 - f1)
+    byts = b1 + (n_rep - 1) * (b2 - b1)
+    coll = c1 + (n_rep - 1) * (c2 - c1)
+    return flops, byts, coll, recs
+
+
+def roofline_terms(flops, byts, coll):
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                   key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dominant,
+    }
+
+
+def model_flops(arch, shape_name):
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n * tokens
+    return 2 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyse_cell(arch, shape, chips=256):
+    from repro.configs import cell_supported
+
+    if not cell_supported(arch, shape):
+        return {"arch": arch, "shape": shape, "skipped": True}
+    flops, byts, coll, _ = extrapolated_costs(arch, shape)
+    terms = roofline_terms(flops, byts, coll)
+    mf = model_flops(arch, shape) / chips
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "per_device": {"hlo_flops": flops, "hlo_bytes": byts,
+                       "collective_bytes": coll},
+        "terms": terms,
+        "model_flops_per_device": mf,
+        "useful_compute_ratio": mf / flops if flops else 0.0,
+        # roofline fraction: useful model flops versus the time the dominant
+        # term forces us to spend
+        "dominant_s": max(terms["compute_s"], terms["memory_s"],
+                          terms["collective_s"]),
+    }
+    rec["roofline_fraction"] = (
+        (mf / PEAK_FLOPS) / rec["dominant_s"] if rec["dominant_s"] else 0.0
+    )
+    os.makedirs(ROOF, exist_ok=True)
+    with open(f"{ROOF}/{arch}__{shape}.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    print(
+        f"{arch:28s} {shape:12s} comp={terms['compute_s']*1e3:9.2f}ms "
+        f"mem={terms['memory_s']*1e3:9.2f}ms coll={terms['collective_s']*1e3:9.2f}ms "
+        f"dom={terms['dominant']:10s} useful={rec['useful_compute_ratio']:.2f} "
+        f"roofline={rec['roofline_fraction']:.3f}"
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    from repro.configs import SHAPES, list_archs
+
+    cells = (
+        [(a, s) for a in list_archs() for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    for a, s in cells:
+        try:
+            analyse_cell(a, s)
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {a} {s}: {e}")
+
+
+if __name__ == "__main__":
+    main()

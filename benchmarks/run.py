@@ -1,0 +1,98 @@
+"""Benchmark harness — one entry per paper table/figure + framework numbers.
+
+  table2   paper Table 2 (learning quality + rejection counts)
+  table3   paper Table 3 / Fig. 2 (sampling + preprocessing wall-clock vs M)
+  prop1    Proposition 1 (tree sampling cost scales ~log M after preprocess)
+  kernels  Pallas-kernel oracle timings (CPU reference path)
+
+Prints ``name,us_per_call,derived`` CSV rows at the end for machine
+consumption; human-readable tables along the way.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _csv_rows():
+    rows = []
+
+    print("=" * 72)
+    print("## Table 3 / Fig 2 — sampling time vs M (Cholesky vs rejection)")
+    print("=" * 72)
+    from . import sampling_time
+
+    srows = sampling_time.run(ms=[2 ** e for e in range(8, 15)], k=32)
+    for r in srows:
+        rows.append((f"cholesky_M{r['M']}", r["cholesky_s"] * 1e6,
+                     f"speedup_x{r['speedup']:.2f}"))
+        rows.append((f"rejection_M{r['M']}", r["rejection_s"] * 1e6,
+                     f"trials_{r['expected_trials']:.2f}"))
+    # the paper's headline: rejection time grows sublinearly — compare
+    # endpoints: 64x more items should cost << 64x more time
+    t_ratio = srows[-1]["rejection_s"] / max(srows[0]["rejection_s"], 1e-9)
+    m_ratio = srows[-1]["M"] / srows[0]["M"]
+    print(f"\nrejection endpoint ratio: time x{t_ratio:.1f} for items x{m_ratio:.0f} "
+          f"(Cholesky x{srows[-1]['cholesky_s']/max(srows[0]['cholesky_s'],1e-9):.1f})")
+
+    print("=" * 72)
+    print("## Table 2 — learning quality (planted synthetic baskets)")
+    print("=" * 72)
+    from . import learning_quality
+
+    lrows = learning_quality.run()
+    for name, r in lrows.items():
+        rows.append((f"quality_{name}_MPR", r["MPR"], f"auc_{r['AUC']:.3f}"))
+        if "rejections" in r:
+            rows.append((f"rejections_{name}", r["rejections"], ""))
+
+    print("=" * 72)
+    print("## Proposition 1 — per-sample cost after preprocessing")
+    print("=" * 72)
+    from repro.core import preprocess, sample as rejection_sample
+    from repro.data.baskets import synthetic_features
+
+    for m in (1024, 4096, 16384):
+        v, b, d = synthetic_features(m, 16, seed=0)
+        s = 1.0 / np.sqrt(m)
+        sampler = preprocess(v * s, b * s, d, block=64)
+        f = jax.jit(lambda k: rejection_sample(sampler, k, 200).items)
+        jax.block_until_ready(f(jax.random.PRNGKey(0)))
+        t0 = time.perf_counter()
+        for i in range(5):
+            jax.block_until_ready(f(jax.random.PRNGKey(i)))
+        dt = (time.perf_counter() - t0) / 5
+        print(f"M={m:6d}  {dt*1e3:8.2f} ms/sample")
+        rows.append((f"prop1_sample_M{m}", dt * 1e6, ""))
+
+    print("=" * 72)
+    print("## Pallas kernel reference timings (CPU oracle path)")
+    print("=" * 72)
+    from repro.kernels.bilinear.ref import bilinear_ref
+
+    z = jnp.ones((65536, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    f = jax.jit(bilinear_ref)
+    jax.block_until_ready(f(z, w))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        jax.block_until_ready(f(z, w))
+    dt = (time.perf_counter() - t0) / 10
+    print(f"bilinear 65536x64: {dt*1e3:.2f} ms")
+    rows.append(("bilinear_65536x64", dt * 1e6, ""))
+    return rows
+
+
+def main() -> None:
+    rows = _csv_rows()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

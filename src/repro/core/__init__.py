@@ -1,0 +1,69 @@
+"""Core NDPP library — the paper's contribution in JAX.
+
+Public API:
+  types      — NDPPParams / ONDPPParams / SpectralNDPP containers
+  youla      — O(M K^2) Youla decomposition of the skew part (Alg. 4)
+  cholesky   — linear-time O(M K^2) exact sampler (Alg. 1 RHS)
+  tree       — proposal eigens + flat tree + elementary DPP sampling (Alg. 3)
+  rejection  — sublinear-time rejection sampler (Alg. 2) + Theorem 2 rates
+  learning   — ONDPP objective (Eq. 14) + baselines + constraint projection
+  map_inference — greedy conditioning / MPR
+"""
+from .types import (  # noqa: F401
+    NDPPParams,
+    ONDPPParams,
+    SpectralNDPP,
+    d_from_sigma,
+    x_from_sigma,
+    dense_l,
+    dense_l_spectral,
+    dense_l_hat,
+)
+from .youla import youla_decompose, spectral_from_params  # noqa: F401
+from .cholesky import (  # noqa: F401
+    marginal_inner,
+    sample_cholesky,
+    sample_cholesky_params,
+    sample_cholesky_spectral,
+    sample_cholesky_blocked,
+)
+from .tree import (  # noqa: F401
+    SampleTree,
+    construct_tree,
+    proposal_eigens,
+    sample_proposal_dpp,
+    sample_elementary,
+    sample_elementary_dense,
+)
+from .rejection import (  # noqa: F401
+    NDPPSampler,
+    RejectionSample,
+    preprocess,
+    sample,
+    sample_batch,
+    expected_trials,
+    det_ratio_exact,
+    log_det_ratio,
+)
+from .learning import (  # noqa: F401
+    Baskets,
+    ondpp_loss,
+    ndpp_loss,
+    symmetric_dpp_loss,
+    project_constraints,
+    init_ondpp,
+    init_ndpp,
+    item_frequencies,
+    log_normalizer,
+)
+from .map_inference import (  # noqa: F401
+    next_item_scores,
+    greedy_map,
+    mean_percentile_rank,
+)
+from .kdpp import (  # noqa: F401
+    elementary_symmetric,
+    sample_fixed_size_e,
+    sample_kdpp,
+    sample_k_ndpp,
+)

@@ -1,0 +1,146 @@
+"""Rejection NDPP sampling (Section 4, Algorithm 2).
+
+Target:   Pr_L(Y)    ∝ det(L_Y),      L    = Z X Z^T (nonsymmetric)
+Proposal: Pr_Lhat(Y) ∝ det(Lhat_Y),   Lhat = Z Xhat Z^T (symmetric PSD)
+
+Theorem 1 gives det(L_Y) <= det(Lhat_Y) for all Y, so the acceptance
+probability is exactly det(L_Y) / det(Lhat_Y) and the expected number of
+trials is det(Lhat + I) / det(L + I) — which, for ONDPP kernels (V ⟂ B),
+equals prod_j (1 + 2 sigma_j / (sigma_j^2 + 1)) (Theorem 2), independent
+of M.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import SpectralNDPP
+from .tree import SampleTree, construct_tree, proposal_eigens, sample_proposal_dpp
+
+
+class RejectionSample(NamedTuple):
+    items: jax.Array     # (2K,) padded item indices (-1 = empty slot)
+    mask: jax.Array      # (2K,) validity mask
+    trials: jax.Array    # number of proposals drawn (>= 1)
+    accepted: jax.Array  # bool; False => max_trials exhausted (returns last Y)
+
+
+@dataclasses.dataclass(frozen=True)
+class NDPPSampler:
+    """Preprocessed state for repeated sublinear-time sampling.
+
+    Preprocess (one-time, O(M K^2)): Youla decomposition -> spectral form,
+    proposal eigendecomposition, flat tree construction.  Each sample then
+    costs O((K + k^3 log(M/block) + k^2 block) * E[#trials]).
+    """
+
+    sp: SpectralNDPP
+    tree: SampleTree
+
+    @property
+    def M(self) -> int:
+        return self.sp.M
+
+
+def _tf(s):  # pytree registration
+    return (s.sp, s.tree), None
+
+
+jax.tree_util.register_pytree_node(
+    NDPPSampler, _tf, lambda _, c: NDPPSampler(sp=c[0], tree=c[1])
+)
+
+
+def preprocess(V: jax.Array, B: jax.Array, D: jax.Array, block: int = 64) -> NDPPSampler:
+    """PREPROCESS of Algorithm 2 (+ tree construction of Algorithm 3)."""
+    from .youla import spectral_from_params
+
+    sp = spectral_from_params(V, B, D)
+    lam, w = proposal_eigens(sp)
+    tree = construct_tree(lam, w, block=block)
+    return NDPPSampler(sp=sp, tree=tree)
+
+
+def _masked_rows(Z: jax.Array, items: jax.Array, mask: jax.Array) -> jax.Array:
+    rows = Z[jnp.maximum(items, 0)]
+    return rows * mask[:, None].astype(Z.dtype)
+
+
+def log_det_ratio(
+    sp: SpectralNDPP, items: jax.Array, mask: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(log det(L_Y) - log det(Lhat_Y), sign of det(L_Y)) with padded Y.
+
+    Both submatrices are built in the 2K-dim feature space: L_Y = Z_Y X Z_Y^T
+    (k_pad x k_pad) with unit diagonal on padding rows so the padding
+    contributes a factor of exactly 1.
+    """
+    zy = _masked_rows(sp.Z, items, mask)
+    x = sp.x_matrix()
+    pad_eye = jnp.diag((~mask).astype(zy.dtype))
+    l_y = zy @ x @ zy.T + pad_eye
+    lhat_y = (zy * sp.x_diag_hat()[None, :]) @ zy.T + pad_eye
+    sign_l, logdet_l = jnp.linalg.slogdet(l_y)
+    sign_h, logdet_h = jnp.linalg.slogdet(lhat_y)
+    good = (sign_l > 0) & (sign_h > 0)
+    return jnp.where(good, logdet_l - logdet_h, -jnp.inf), sign_l
+
+
+def expected_trials(sp: SpectralNDPP) -> jax.Array:
+    """Theorem 2 (requires V ⟂ B): det(Lhat+I)/det(L+I) =
+    prod_j (1 + 2 sigma_j/(sigma_j^2+1))."""
+    s = sp.sigma
+    return jnp.prod(1.0 + 2.0 * s / (s ** 2 + 1.0))
+
+
+def det_ratio_exact(sp: SpectralNDPP) -> jax.Array:
+    """det(Lhat + I) / det(L + I) without the orthogonality assumption,
+    via 2K x 2K determinants (identity det(I + Z A Z^T) = det(I + A Z^T Z))."""
+    g = sp.Z.T @ sp.Z
+    r = g.shape[0]
+    eye = jnp.eye(r, dtype=g.dtype)
+    _, ld_l = jnp.linalg.slogdet(eye + sp.x_matrix() @ g)
+    _, ld_h = jnp.linalg.slogdet(eye + (sp.x_diag_hat()[:, None] * g))
+    return jnp.exp(ld_h - ld_l)
+
+
+def sample(
+    sampler: NDPPSampler, key: jax.Array, max_trials: int = 1000
+) -> RejectionSample:
+    """SAMPLEREJECT of Algorithm 2: draw from DPP(Lhat) via the tree, accept
+    with probability det(L_Y)/det(Lhat_Y)."""
+
+    def cond(state):
+        _, trials, accepted, _, _ = state
+        return (~accepted) & (trials < max_trials)
+
+    def body(state):
+        k, trials, _, _, _ = state
+        k, k_prop, k_acc = jax.random.split(k, 3)
+        items, mask = sample_proposal_dpp(sampler.tree, k_prop)
+        log_ratio, _ = log_det_ratio(sampler.sp, items, mask)
+        u = jax.random.uniform(k_acc, dtype=jnp.float32)
+        accept = jnp.log(u) <= log_ratio
+        return (k, trials + 1, accept, items, mask)
+
+    r = sampler.tree.R
+    init = (
+        key,
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(False),
+        -jnp.ones((r,), jnp.int32),
+        jnp.zeros((r,), bool),
+    )
+    _, trials, accepted, items, mask = jax.lax.while_loop(cond, body, init)
+    return RejectionSample(items=items, mask=mask, trials=trials, accepted=accepted)
+
+
+def sample_batch(
+    sampler: NDPPSampler, key: jax.Array, n: int, max_trials: int = 1000
+) -> RejectionSample:
+    """vmap'd repeated sampling (the tree is reused across draws)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: sample(sampler, k, max_trials))(keys)

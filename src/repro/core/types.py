@@ -1,0 +1,146 @@
+"""Core parameter containers for NDPP kernels.
+
+The paper parameterizes a nonsymmetric DPP kernel over M items as
+
+    L = V V^T + B (D - D^T) B^T,   V, B in R^{M x K}, D in R^{K x K}
+
+(Gartrell et al., 2021 decomposition).  The ONDPP subclass (Section 5 of the
+paper) additionally constrains V^T B = 0, B^T B = I and parameterizes the
+skew part by nonnegative ``sigma`` (Eq. 13), so that D - D^T is the
+block-diagonal of [[0, sigma_j], [-sigma_j, 0]] blocks.
+
+All containers are registered pytrees so they flow through jit/grad/shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pytree_dataclass(cls):
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return tuple(getattr(obj, n) for n in fields), None
+
+    def unflatten(_, children):
+        return cls(*children)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@_pytree_dataclass
+class NDPPParams:
+    """General low-rank NDPP kernel: ``L = V V^T + B (D - D^T) B^T``."""
+
+    V: jax.Array  # (M, K)
+    B: jax.Array  # (M, K)
+    D: jax.Array  # (K, K)
+
+    @property
+    def M(self) -> int:
+        return self.V.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.V.shape[1]
+
+
+@_pytree_dataclass
+class ONDPPParams:
+    """Orthogonality-constrained NDPP (Section 5).
+
+    ``D - D^T`` is block-diagonal with ``[[0, s], [-s, 0]]`` blocks built
+    from ``sigma`` (length K/2, nonnegative).  The learner maintains the
+    constraints ``B^T B = I`` and ``V^T B = 0`` by projection.
+    """
+
+    V: jax.Array      # (M, K)
+    B: jax.Array      # (M, K)
+    sigma: jax.Array  # (K // 2,)
+
+    @property
+    def M(self) -> int:
+        return self.V.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.V.shape[1]
+
+    def to_general(self) -> NDPPParams:
+        return NDPPParams(self.V, self.B, d_from_sigma(self.sigma))
+
+
+@_pytree_dataclass
+class SpectralNDPP:
+    """Spectral (Youla) form of an NDPP kernel: ``L = Z X Z^T``.
+
+    ``Z = [V, y_1, ..., y_K]`` (M x 2K).  ``X`` is block diagonal:
+    ``diag(I_K, [[0, sigma_j], [-sigma_j, 0]]...)`` (Eq. 7).  The symmetric
+    *proposal* kernel of Section 4.1 is ``Lhat = Z Xhat Z^T`` with
+    ``Xhat = diag(I_K, sigma_j, sigma_j, ...)``.
+
+    ``sigma`` here are the Youla eigenvalues of the skew part; the first K
+    diagonal entries of X / Xhat are ones (the symmetric part keeps V
+    unchanged).
+    """
+
+    Z: jax.Array      # (M, 2K)
+    sigma: jax.Array  # (K // 2,) Youla eigenvalues (nonnegative)
+
+    @property
+    def M(self) -> int:
+        return self.Z.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.Z.shape[1] // 2
+
+    def x_diag_hat(self) -> jax.Array:
+        """Diagonal of Xhat: (2K,) = [1]*K ++ [s_1, s_1, ..., s_{K/2}]."""
+        k = self.K
+        rep = jnp.repeat(self.sigma, 2)
+        return jnp.concatenate([jnp.ones((k,), self.sigma.dtype), rep])
+
+    def x_matrix(self) -> jax.Array:
+        """Dense 2K x 2K block-diagonal X (Eq. 7)."""
+        return x_from_sigma(self.K, self.sigma)
+
+
+def d_from_sigma(sigma: jax.Array) -> jax.Array:
+    """Eq. 13: D = blockdiag([[0, s_j], [0, 0]]) for j = 1..K/2."""
+    half = sigma.shape[0]
+    k = 2 * half
+    d = jnp.zeros((k, k), sigma.dtype)
+    idx = jnp.arange(half)
+    return d.at[2 * idx, 2 * idx + 1].set(sigma)
+
+
+def x_from_sigma(k: int, sigma: jax.Array) -> jax.Array:
+    """Dense X = diag(I_K, [[0, s], [-s, 0]] blocks) in R^{2K x 2K}."""
+    x = jnp.zeros((2 * k, 2 * k), sigma.dtype)
+    x = x.at[jnp.arange(k), jnp.arange(k)].set(1.0)
+    half = sigma.shape[0]
+    i = k + 2 * jnp.arange(half)
+    x = x.at[i, i + 1].set(sigma)
+    x = x.at[i + 1, i].set(-sigma)
+    return x
+
+
+def dense_l(params: NDPPParams) -> jax.Array:
+    """Materialize the full M x M kernel (tests / tiny M only)."""
+    skew = params.D - params.D.T
+    return params.V @ params.V.T + params.B @ skew @ params.B.T
+
+
+def dense_l_spectral(sp: SpectralNDPP) -> jax.Array:
+    return sp.Z @ sp.x_matrix() @ sp.Z.T
+
+
+def dense_l_hat(sp: SpectralNDPP) -> jax.Array:
+    return (sp.Z * sp.x_diag_hat()[None, :]) @ sp.Z.T

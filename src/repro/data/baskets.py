@@ -1,0 +1,87 @@
+"""Synthetic basket datasets matching the paper's generator (Section 6.2).
+
+"We first sample x_1..x_100 ~ N(0, I_{2K}/(2K)), and integers t_1..t_100
+from Poisson(5), rescaled so sum_i t_i = M.  Next, we draw t_i random
+vectors from N(x_i, I_{2K}), and assign the first K dims as rows of V and
+the latter as rows of B."  Used for Fig. 2 runtime curves.
+
+For the learning experiments (paper Table 2) we also generate *observed
+baskets* from a planted NDPP so MPR/AUC have signal: items co-occur
+according to a ground-truth nonsymmetric kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.learning import Baskets
+
+
+def synthetic_features(m: int, k: int, seed: int = 0, n_clusters: int = 100):
+    """Non-uniform features for V, B as in Han & Gillenwater (2020)."""
+    rng = np.random.default_rng(seed)
+    n_clusters = min(n_clusters, m)
+    centers = rng.normal(size=(n_clusters, 2 * k)) / np.sqrt(2 * k)
+    t = rng.poisson(5.0, size=n_clusters).astype(np.float64) + 1e-9
+    t = np.maximum(np.round(t * m / t.sum()).astype(int), 0)
+    # fix rounding so counts sum to m
+    diff = m - t.sum()
+    t[0] += diff
+    rows = []
+    for i, ti in enumerate(t):
+        if ti > 0:
+            rows.append(centers[i] + rng.normal(size=(ti, 2 * k)))
+    z = np.concatenate(rows, axis=0)[:m]
+    v, b = z[:, :k], z[:, k:]
+    d = rng.normal(size=(k, k))
+    return (
+        jnp.asarray(v, jnp.float32),
+        jnp.asarray(b, jnp.float32),
+        jnp.asarray(d, jnp.float32),
+    )
+
+
+def planted_baskets(
+    m: int,
+    n_baskets: int,
+    k_max: int = 8,
+    seed: int = 0,
+    n_topics: int = 32,
+) -> Tuple[Baskets, Baskets]:
+    """(train, test) padded baskets from a topic model with signed
+    pairwise interactions (positively correlated item pairs exist, which
+    is what NDPPs can capture and symmetric DPPs cannot)."""
+    rng = np.random.default_rng(seed)
+    topic_of = rng.integers(0, n_topics, size=m)
+    # companion map: item i attracts item comp[i] (positive correlation)
+    comp = (np.arange(m) + m // 2) % m
+    items = np.zeros((n_baskets, k_max), np.int32)
+    mask = np.zeros((n_baskets, k_max), np.float32)
+    for n in range(n_baskets):
+        size = rng.integers(2, k_max + 1)
+        topic = rng.integers(0, n_topics)
+        pool = np.flatnonzero(topic_of == topic)
+        if len(pool) < size:
+            pool = np.arange(m)
+        chosen = list(rng.choice(pool, size=size // 2 + 1, replace=False))
+        # attract companions
+        for i in list(chosen):
+            if len(chosen) >= size:
+                break
+            if rng.random() < 0.6:
+                c = comp[i]
+                if c not in chosen:
+                    chosen.append(c)
+        while len(chosen) < size:
+            c = int(rng.integers(0, m))
+            if c not in chosen:
+                chosen.append(c)
+        chosen = chosen[:size]
+        items[n, : len(chosen)] = chosen
+        mask[n, : len(chosen)] = 1.0
+    n_train = int(0.9 * n_baskets)
+    tr = Baskets(jnp.asarray(items[:n_train]), jnp.asarray(mask[:n_train]))
+    te = Baskets(jnp.asarray(items[n_train:]), jnp.asarray(mask[n_train:]))
+    return tr, te

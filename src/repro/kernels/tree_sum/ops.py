@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the tree_sum Pallas kernel."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .ref import block_outer_sums_ref
+from .tree_sum import block_outer_sums_pallas
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def block_outer_sums(
+    W: jax.Array, block: int, *, force_interpret: bool = False
+) -> jax.Array:
+    """W: (n*block, R) -> (n, R, R) per-block Gram matrices."""
+    interpret = force_interpret or _INTERPRET
+    if not (_on_tpu() or interpret):
+        return block_outer_sums_ref(W, block)
+    m, r = W.shape
+    r_pad = (-r) % 128
+    wp = jnp.pad(W, ((0, 0), (0, r_pad)))
+    out = block_outer_sums_pallas(wp, block=block, interpret=interpret)
+    return out[:, :r, :r]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tree leaf-level outer-product reduction."""
+import jax
+import jax.numpy as jnp
+
+
+def block_outer_sums_ref(W: jax.Array, block: int) -> jax.Array:
+    """W: (n*block, R) -> (n, R, R), out[n] = sum_{j in block n} w_j w_j^T."""
+    m, r = W.shape
+    assert m % block == 0
+    wb = W.reshape(m // block, block, r).astype(jnp.float32)
+    return jnp.einsum("nbi,nbj->nij", wb, wb)

@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: per-block Gram matrices for tree construction (Alg. 3).
+
+The leaf level of the flat sample tree stores, for every block of ``block``
+consecutive items, the matrix  Σ_n = Z_n^T Z_n  (R x R).  On TPU this is one
+(R, block) x (block, R) MXU matmul per grid step with the Z tile read from
+HBM exactly once.  Upper tree levels are pairwise sums of these outputs
+(done by the caller; they touch (M/block) * R^2 bytes, negligible).
+
+Grid: (n_blocks,).  block and R are MXU-aligned by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tree_sum_kernel(z_ref, out_ref):
+    z = z_ref[...]  # (block, R) VMEM
+    zf = z.astype(jnp.float32)
+    out_ref[...] = jnp.dot(zf.T, zf, preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def block_outer_sums_pallas(
+    W: jax.Array, *, block: int, interpret: bool = False
+) -> jax.Array:
+    m, r = W.shape
+    assert m % block == 0
+    n = m // block
+    return pl.pallas_call(
+        _tree_sum_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, r, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r, r), jnp.float32),
+        interpret=interpret,
+    )(W)

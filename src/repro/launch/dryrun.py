@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count at first initialization.  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective statistics.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Each cell produces a JSON file with:
+  memory_analysis   (per-device bytes: args/outputs/temps/peak)
+  cost_analysis     (HLO flops / bytes accessed)
+  collectives       (per-op-type operand bytes parsed from the compiled HLO)
+  timing            (lower / compile wall time)
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    SHAPES,
+    cell_supported,
+    get_config,
+    input_specs,
+    list_archs,
+    skip_reason,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.steps import (
+    abstract_cache,
+    abstract_model,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    opt_state_specs,
+    serve_shardings,
+    to_named,
+    train_shardings,
+    tree_specs,
+)
+
+# v5e-class optimizer defaults per size class: full AdamW moments fit the
+# <= 20B-class configs; the 400B-class MoEs use Adafactor + bf16 moments
+# (DESIGN.md §6).
+_BIG_ARCHS = {"llama4-maverick-400b-a17b", "jamba-1.5-large-398b"}
+
+
+def optimizer_for(arch: str) -> OptimizerConfig:
+    if arch in _BIG_ARCHS:
+        return OptimizerConfig(name="adafactor", grad_compression="bf16")
+    return OptimizerConfig(name="adamw", moment_dtype="float32",
+                           grad_compression="bf16")
+
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+    "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output bytes of every collective op in compiled (SPMD) HLO.
+
+    Handles tuple-shaped outputs and async (-start) forms; -done forms are
+    skipped so async collectives are not double-counted."""
+    totals = {}
+    counts = {}
+    op_re = re.compile(
+        r"^\S+\s*=\s*(.*?)\s*"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(-start|-done)?\("
+    )
+    for line in hlo_text.splitlines():
+        m = op_re.match(line.strip())
+        if not m or m.group(3) == "-done":
+            continue
+        op = m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[op] = totals.get(op, 0) + nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return totals, counts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             overrides=None, tag: str = "", grad_accum: int = 1):
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not cell_supported(arch, shape_name):
+        record["skipped"] = skip_reason(arch, shape_name)
+        _write(record, out_dir, arch, shape_name, multi_pod, tag)
+        print(f"[dryrun] SKIP {arch} x {shape_name}: {record['skipped']}")
+        return record
+
+    t0 = time.perf_counter()
+    specs = input_specs(cfg, shape)
+    opt = make_optimizer(optimizer_for(arch))
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, opt, mesh, grad_accum=grad_accum)
+            in_specs, out_specs, (p_sh, o_sh, b_sh) = train_shardings(
+                cfg, mesh, opt, specs
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=to_named(mesh, in_specs),
+                out_shardings=to_named(mesh, out_specs),
+            )
+            lowered = jitted.lower(p_sh, o_sh, specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, shape.seq_len, mesh)
+            in_specs, out_specs, (p_sh, b_sh) = serve_shardings(
+                cfg, mesh, specs, shape.seq_len, "prefill"
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=to_named(mesh, in_specs),
+                out_shardings=to_named(mesh, out_specs),
+            )
+            lowered = jitted.lower(p_sh, specs)
+        else:  # decode
+            step = make_decode_step(cfg, mesh)
+            in_specs, out_specs, (p_sh, c_sh, b_sh) = serve_shardings(
+                cfg, mesh, specs, shape.seq_len, "decode"
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=to_named(mesh, in_specs),
+                out_shardings=to_named(mesh, out_specs),
+            )
+            lowered = jitted.lower(p_sh, c_sh, specs)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    record["timing"] = {"lower_s": t_lower, "compile_s": t_compile}
+    record["memory_analysis"] = {
+        k: int(getattr(mem, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+        if hasattr(mem, k)
+    }
+    record["cost_analysis"] = {
+        k: float(v)
+        for k, v in (cost or {}).items()
+        if isinstance(v, (int, float)) and (
+            k in ("flops", "bytes accessed") or k.startswith("bytes accessed")
+        )
+    }
+    hlo = compiled.as_text()
+    totals, counts = collective_bytes(hlo)
+    record["collectives"] = {"bytes": totals, "counts": counts}
+    record["hlo_size"] = len(hlo)
+    print(
+        f"[dryrun] OK {arch} x {shape_name} mesh={record['mesh']} "
+        f"flops={record['cost_analysis'].get('flops', 0):.3e} "
+        f"coll={sum(totals.values()):.3e}B "
+        f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)"
+    )
+    print("  memory_analysis:", record["memory_analysis"])
+    _write(record, out_dir, arch, shape_name, multi_pod, tag)
+    return record
+
+
+def _write(record, out_dir, arch, shape_name, multi_pod, tag=""):
+    import os as _os
+
+    _os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    suffix = f".{tag}" if tag else ""
+    path = f"{out_dir}/{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--unroll", action="store_true",
+                    help="scan_layers=False: full-depth HLO so cost_analysis "
+                         "counts every layer (roofline flops extraction)")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override n_layers (depth-extrapolation probes)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatch gradient accumulation for train cells")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    overrides = {}
+    if args.unroll:
+        overrides["scan_layers"] = False
+    if args.layers is not None:
+        overrides["n_layers"] = args.layers
+    overrides = overrides or None
+    tag = args.tag or ("unroll" if args.unroll else "")
+    failures = []
+    for arch, shape, mp in cells:
+        try:
+            run_cell(arch, shape, mp, args.out, overrides=overrides, tag=tag,
+                     grad_accum=args.grad_accum)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, mp, repr(e)))
+            print(f"[dryrun] FAIL {arch} x {shape} multi_pod={mp}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} failures")
+        sys.exit(1)
+    print("[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

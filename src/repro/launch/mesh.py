@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axes: "data" carries DP/FSDP; "model" carries TP/EP/sequence-sharding;
+    "pod" (multi-pod only) is an outer data-parallel axis across the
+    inter-pod DCN/ICI links.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices this host has, as a (data, model) mesh — used by
+    tests/examples on CPU (1 device -> 1x1 mesh)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

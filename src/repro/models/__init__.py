@@ -1,0 +1,19 @@
+"""Architecture zoo: composable decoder-only LMs (dense / MLA / MoE / SSD /
+hybrid) with logical-axis sharding, scan-over-layers, and KV-cache serving."""
+from .config import (  # noqa: F401
+    HybridConfig,
+    MLAConfig,
+    MambaConfig,
+    MoEConfig,
+    ModelConfig,
+)
+from .model import (  # noqa: F401
+    cache_axes,
+    default_positions,
+    forward_hidden,
+    init_cache,
+    init_model,
+    layer_descriptors,
+    lm_loss,
+    logits_last,
+)

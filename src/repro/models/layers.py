@@ -1,0 +1,386 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, embeddings, attention, MLP.
+
+Parameter convention: every ``init_*`` returns ``(params, axes)`` — two
+pytrees of identical structure, the second holding logical-axis tuples for
+``models.sharding.logical_to_spec``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- init utils
+# Abstract-init mode: param creators return ShapeDtypeStructs instead of
+# arrays, so 400B-parameter configs can be "initialized" for lowering
+# without allocating anything (the dry-run path).
+_ABSTRACT = False
+
+
+class abstract_init:
+    def __enter__(self):
+        global _ABSTRACT
+        self._prev = _ABSTRACT
+        _ABSTRACT = True
+
+    def __exit__(self, *exc):
+        global _ABSTRACT
+        _ABSTRACT = self._prev
+
+
+def _normal(key, shape, dtype, scale):
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def make_const(fn, shape, dtype):
+    """fn() -> array, skipped in abstract mode."""
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    return fn()
+
+
+def ones(shape, dtype):
+    return make_const(lambda: jnp.ones(shape, dtype), shape, dtype)
+
+
+def zeros(shape, dtype):
+    return make_const(lambda: jnp.zeros(shape, dtype), shape, dtype)
+
+
+def dense_init(key, d_in: int, shape, dtype):
+    return _normal(key, shape, dtype, d_in ** -0.5)
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, weight: Optional[jax.Array], eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def nonparam_layer_norm(x: jax.Array, eps: float = 1e-5):
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, x: jax.Array, weight: Optional[jax.Array]):
+    if cfg.norm_type == "nonparam_ln":
+        return nonparam_layer_norm(x)
+    return rms_norm(x, weight)
+
+
+def init_norm(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    if cfg.norm_type == "nonparam_ln":
+        return {}, {}
+    return (
+        {"w": ones((cfg.d_model,), cfg.params_dtype)},
+        {"w": (None,)},
+    )
+
+
+def norm_weight(p: Params) -> Optional[jax.Array]:
+    return p.get("w")
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,               # (B, H, S, D)
+    positions: jax.Array,       # (B, S) or (3, B, S) for M-RoPE
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> jax.Array:
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (D/2,)
+    if mrope_sections is None:
+        ang = positions.astype(jnp.float32)[:, None, :, None] * inv  # (B,1,S,D/2)
+    else:
+        # M-RoPE (Qwen2-VL): the D/2 frequency slots are split into
+        # (temporal, height, width) sections, each driven by its own
+        # position stream.  positions: (3, B, S).
+        secs = mrope_sections
+        assert sum(secs) == d // 2, (secs, d)
+        sel = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(secs)]
+        )                                                     # (D/2,)
+        pos = positions.astype(jnp.float32)                   # (3, B, S)
+        pos_per_slot = pos[sel]                               # (D/2, B, S)
+        ang = jnp.moveaxis(pos_per_slot, 0, -1)[:, None, :, :] * inv
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def chunked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, chunk: int, scale: float
+) -> jax.Array:
+    """Online-softmax attention over query chunks — O(S * chunk) memory.
+
+    XLA path for long sequences on non-TPU backends (the Pallas flash
+    kernel covers TPU).  q: (B,H,S,D); k/v: (B,KVH,S,D)."""
+    b, h, s, d = q.shape
+    dv = v.shape[-1]  # MLA: value dim may differ from q/k dim
+    kvh = k.shape[1]
+    g = h // kvh
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    nq = s // chunk
+
+    @jax.checkpoint
+    def body(_, qi):
+        # rematerialized in bwd: the (B,H,chunk,S) score/softmax tensors are
+        # never stored across chunks (flash-attention-style backward)
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * chunk, chunk, axis=2)
+        qg = qc.astype(jnp.float32).reshape(b, kvh, g, chunk, d)
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk", qg * scale, kf)
+        rows = qi * chunk + jnp.arange(chunk)
+        cols = jnp.arange(s)
+        sc = jnp.where(rows[:, None] >= cols[None, :], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+        return None, o.reshape(b, h, chunk, dv).astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nq))
+    return jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dv)
+
+
+def sharded_decode_attention(
+    cfg: ModelConfig,
+    mesh,
+    q: jax.Array,       # (B, H, 1, D)
+    k: jax.Array,       # (B, KVH, S, D) — sequence-sharded over "model"
+    v: jax.Array,
+    kv_len: jax.Array,  # (B,)
+) -> jax.Array:
+    """Decode attention that never re-shards the KV cache.
+
+    The cache's sequence dim stays sharded over the "model" axis; softmax
+    statistics and the (B,H,1,D) partial outputs are combined with tiny
+    all-reduces instead of replicating the multi-GiB cache every step
+    (XLA's default einsum strategy re-shards the cache to kv-head sharding,
+    an involuntary full rematerialization — see EXPERIMENTS.md §Perf)."""
+    from .sharding import constrain
+
+    b, h, _, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    s = k.shape[2]
+    scale = d ** -0.5
+    seq_ax = ("batch", "kv_heads", None, "seq_model")
+    # keep the cache in bf16 end-to-end: accumulate in f32 via the MXU's
+    # preferred_element_type instead of materializing an f32 cache copy
+    # (that copy costs 2x the cache bytes in HBM traffic per decode step)
+    qg = (q.reshape(b, kvh, g, d).astype(jnp.float32) * scale).astype(k.dtype)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = constrain(scores, mesh, seq_ax)
+    valid = jnp.arange(s)[None, :] < kv_len[:, None]            # (B, S)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)                 # all-reduce max
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)                      # all-reduce sum
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def attention_core(
+    cfg: ModelConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kv_len: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Dispatch: Pallas flash on TPU; chunked-XLA for long S; plain ref else."""
+    from repro.kernels.attention import ops as aops
+
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    b, h, s, _ = q.shape
+    if kv_len is None and s > cfg.attn_chunk:
+        try:
+            if jax.default_backend() == "tpu":
+                return aops.mha(q, k, v, causal=True)
+        except Exception:  # pragma: no cover
+            pass
+        # adapt the query-chunk so the (B,H,chunk,S) f32 score tensor stays
+        # inside the byte budget even for replicated-head configs
+        chunk = cfg.attn_chunk
+        while chunk > 64 and b * h * chunk * s * 4 > cfg.attn_bytes_budget:
+            chunk //= 2
+        while s % chunk:
+            chunk //= 2
+        return chunked_causal_attention(q, k, v, chunk, scale)
+    return aops.mha(q, k, v, causal=True, kv_len=kv_len, scale=scale)
+
+
+def init_attention(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 6)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(ks[0], d, (d, h, hd), cfg.params_dtype),
+        "wk": dense_init(ks[1], d, (d, kvh, hd), cfg.params_dtype),
+        "wv": dense_init(ks[2], d, (d, kvh, hd), cfg.params_dtype),
+        "wo": dense_init(ks[3], h * hd, (h, hd, d), cfg.params_dtype),
+    }
+    a: Params = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones((hd,), cfg.params_dtype)
+        p["k_norm"] = ones((hd,), cfg.params_dtype)
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return p, a
+
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                    # (B, S, D)
+    positions: jax.Array,
+    cache: Optional[Params] = None,  # {"k","v"} (B, KVH, S_max, hd) + pos
+    mesh=None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(cfg.activation_dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(cfg.activation_dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(cfg.activation_dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    if cache is None:
+        o = attention_core(cfg, q, k, v)
+        new_cache = None
+    else:
+        from .sharding import constrain
+
+        pos = cache["pos"]           # (B,) int32: per-sequence lengths
+        upd = jax.vmap(
+            lambda c, new, p: jax.lax.dynamic_update_slice_in_dim(
+                c, new, p, axis=1
+            )
+        )
+        kc = upd(cache["k"], k, pos)
+        vc = upd(cache["v"], v, pos)
+        # seq-sharded decode only helps when kv heads cannot take the
+        # model axis themselves (GQA with kv < mesh extent)
+        try:
+            model_ext = mesh.shape["model"] if mesh is not None else 1
+        except Exception:
+            model_ext = 1
+        use_seq = (
+            mesh is not None
+            and cfg.seq_shard_decode
+            and cfg.n_kv_heads % max(model_ext, 1) != 0
+            and cfg.n_kv_heads < model_ext  # few-kv GQA only; wide MHA
+            # caches (e.g. 24 heads on 16) do better batch-sharded
+        )
+        if use_seq:
+            seq_ax = ("batch", "kv_heads", "seq_model", None)
+            kc = constrain(kc, mesh, seq_ax)
+            vc = constrain(vc, mesh, seq_ax)
+        kv_len = pos + s
+        if s == 1 and use_seq:
+            o = sharded_decode_attention(cfg, mesh, q, kc, vc, kv_len)
+        else:
+            o = attention_core(cfg, q, kc, vc, kv_len=kv_len)
+        new_cache = {"k": kc, "v": vc, "pos": pos + s}
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(cfg.activation_dtype))
+    return out, new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, s_max: int) -> Params:
+    shape = (batch, cfg.n_kv_heads, s_max, cfg.head_dim)
+    return {
+        "k": zeros(shape, cfg.activation_dtype),
+        "v": zeros(shape, cfg.activation_dtype),
+        # per-sequence positions: slots in a serving pool advance
+        # independently (continuous batching, serve/engine.py)
+        "pos": zeros((batch,), jnp.int32),
+    }
+
+
+def attention_cache_axes(cfg: ModelConfig) -> Params:
+    # fallback chain: shard kv heads over "model" when they divide the mesh
+    # (MHA archs); otherwise logical_to_spec drops kv_heads and the
+    # sequence dim takes the model axis (GQA archs) — see §Perf cell 1.
+    seq_ax = "seq_model" if cfg.seq_shard_decode else None
+    return {
+        "k": ("batch", "kv_heads", seq_ax, None),
+        "v": ("batch", "kv_heads", seq_ax, None),
+        "pos": ("batch",),
+    }
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    f = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {
+        "wg": dense_init(ks[0], d, (d, f), cfg.params_dtype),
+        "wu": dense_init(ks[1], d, (d, f), cfg.params_dtype),
+        "wd": dense_init(ks[2], f, (f, d), cfg.params_dtype),
+    }
+    a = {"wg": ("fsdp", "ff"), "wu": ("fsdp", "ff"), "wd": ("ff", "fsdp")}
+    return p, a
+
+
+def mlp_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    dt = cfg.activation_dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+    h = jax.nn.silu(g) * u  # bf16 elementwise: see EXPERIMENTS.md §Perf
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(dt))
+
+
+# ---------------------------------------------------------------- embeddings
+def init_embedding(cfg: ModelConfig, key):
+    p = {"table": _normal(key, (cfg.vocab, cfg.d_model), cfg.params_dtype, 0.02)}
+    a = {"table": ("vocab", "fsdp")}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = dense_init(k2, cfg.d_model, (cfg.d_model, cfg.vocab),
+                                  cfg.params_dtype)
+        a["unembed"] = ("fsdp", "vocab")
+    return p, a
+
+
+def embed(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"].astype(cfg.activation_dtype)[tokens]
+
+
+def unembed_matrix(cfg: ModelConfig, p: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return p["table"].T
+    return p["unembed"]

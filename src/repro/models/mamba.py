@@ -1,0 +1,149 @@
+"""Mamba2 (SSD) mixer block.
+
+Projections follow the Mamba2 layout: in_proj -> [z, x, B, C, dt]; short
+depthwise conv over (x, B, C); SSD scan (Pallas chunked kernel on TPU,
+chunked-jnp elsewhere); gated RMSNorm; out_proj.
+
+Decode carries O(1) state per layer: the (H, N, P) SSM state plus the
+(conv_width - 1) last conv inputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from .layers import dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.mamba.d_state
+
+
+def init_mamba(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    mc = cfg.mamba
+    d, di, n = cfg.d_model, cfg.d_inner, mc.d_state
+    h = cfg.n_mamba_heads
+    ks = jax.random.split(key, 7)
+    p: Params = {
+        "w_in": dense_init(ks[0], d, (d, 2 * di + 2 * n + h), cfg.params_dtype),
+        "conv_w": L.make_const(
+            lambda: (jax.random.normal(ks[1], (mc.conv_width, _conv_channels(cfg)),
+                                       jnp.float32) * 0.1).astype(cfg.params_dtype),
+            (mc.conv_width, _conv_channels(cfg)), cfg.params_dtype),
+        "a_log": L.make_const(lambda: jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32), (h,), jnp.float32),
+        "dt_bias": L.zeros((h,), jnp.float32),
+        "d_skip": L.ones((h,), jnp.float32),
+        "norm_w": L.ones((di,), cfg.params_dtype),
+        "w_out": dense_init(ks[2], di, (di, d), cfg.params_dtype),
+    }
+    a: Params = {
+        "w_in": ("fsdp", "ff"),
+        "conv_w": (None, "ff"),
+        "a_log": ("heads",),
+        "dt_bias": ("heads",),
+        "d_skip": ("heads",),
+        "norm_w": ("ff",),
+        "w_out": ("ff", "fsdp"),
+    }
+    return p, a
+
+
+def _split_in(cfg: ModelConfig, proj: jax.Array):
+    di, n, h = cfg.d_inner, cfg.mamba.d_state, cfg.n_mamba_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: ModelConfig, xbc: jax.Array, conv_w: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  xbc: (B, S, C)."""
+    width = cfg.mamba.conv_width
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)            # (B, S+w-1, C)
+    wf = conv_w.astype(jnp.float32)
+    out = sum(
+        xp[:, i: i + xbc.shape[1]].astype(jnp.float32) * wf[i][None, None]
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def mamba_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                    # (B, S, D)
+    cache: Optional[Params] = None,  # {"conv": (B,w-1,C), "h": (B,H,N,P)}
+) -> Tuple[jax.Array, Optional[Params]]:
+    from repro.kernels.ssd import ops as sops
+
+    mc = cfg.mamba
+    dt_act = cfg.activation_dtype
+    b, s, _ = x.shape
+    di, n, h = cfg.d_inner, mc.d_state, cfg.n_mamba_heads
+    pdim = mc.head_dim
+
+    proj = jnp.einsum("bsd,dk->bsk", x, p["w_in"].astype(dt_act))
+    z, xbc, dt_raw = _split_in(cfg, proj)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(cfg, xbc, p["conv_w"], conv_state)
+    xin = xbc[..., :di]
+    b_in = xbc[..., di: di + n]
+    c_in = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_decay = jnp.exp(-jnp.exp(p["a_log"])[None, None] * dt)         # (B,S,H)
+
+    xh = xin.reshape(b, s, h, pdim)
+    # dt scales the input branch (standard Mamba2 discretization)
+    xh = xh * dt[..., None].astype(xh.dtype)
+    bh = jnp.broadcast_to(b_in[:, :, None, :], (b, s, h, n))
+    ch = jnp.broadcast_to(c_in[:, :, None, :], (b, s, h, n))
+
+    if cache is None:
+        y, h_last = sops.ssd(xh, a_decay.astype(jnp.float32), bh, ch,
+                             chunk=min(mc.chunk, s))
+        new_cache = None
+    else:
+        if s == 1:
+            y1, h_new = sops.ssd_decode_step(
+                xh[:, 0], a_decay[:, 0], bh[:, 0], ch[:, 0], cache["h"]
+            )
+            y = y1[:, None]
+        else:
+            y, h_new = sops.ssd(xh, a_decay.astype(jnp.float32), bh, ch,
+                                h0=cache["h"], chunk=min(mc.chunk, s))
+        new_cache = {"conv": new_conv, "h": h_new}
+
+    y = y + xh * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, di).astype(dt_act)
+    # gate in the activation dtype: the d_inner-wide f32 chain here is the
+    # dominant HBM term of hybrid training (EXPERIMENTS.md §Perf cell 3)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(dt_act))
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+    mc = cfg.mamba
+    return {
+        "conv": L.zeros((batch, mc.conv_width - 1, _conv_channels(cfg)),
+                        cfg.activation_dtype),
+        "h": L.zeros((batch, cfg.n_mamba_heads, mc.d_state, mc.head_dim),
+                     jnp.float32),
+    }
+
+
+def mamba_cache_axes(cfg: ModelConfig) -> Params:
+    return {"conv": ("batch", None, "ff"), "h": ("batch", "heads", None, None)}

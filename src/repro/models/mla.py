@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+KV activations are compressed into a rank-``kv_lora_rank`` latent ``c_kv``
+plus one shared RoPE key head; the decode cache stores only
+(B, S, kv_lora + rope_dim) — the architecture's point is exactly this
+cache compression.  Per-head K(nope)/V are up-projected on the fly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from .layers import apply_rope, dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+def init_mla(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "wq": dense_init(ks[0], d, (d, h, qd), cfg.params_dtype),
+        "w_dkv": dense_init(ks[1], d, (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            cfg.params_dtype),
+        "kv_norm": L.ones((m.kv_lora_rank,), cfg.params_dtype),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank,
+                           (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                           cfg.params_dtype),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank,
+                           (m.kv_lora_rank, h, m.v_head_dim),
+                           cfg.params_dtype),
+        "wo": dense_init(ks[4], h * m.v_head_dim, (h, m.v_head_dim, d),
+                         cfg.params_dtype),
+    }
+    a: Params = {
+        "wq": ("fsdp", "heads", None),
+        "w_dkv": ("fsdp", None),
+        "kv_norm": (None,),
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    return p, a
+
+
+def mla_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    mesh=None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    m = cfg.mla
+    dt = cfg.activation_dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nd, rd = m.qk_nope_head_dim, m.qk_rope_head_dim
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"].astype(dt))
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = rms_norm(c, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)  # (B,1,S,rd)
+
+    if cache is not None:
+        pos = cache["pos"]  # (B,) per-sequence lengths
+        c = jax.vmap(
+            lambda cc, new, pp: jax.lax.dynamic_update_slice_in_dim(
+                cc, new, pp, axis=0)
+        )(cache["c"], c, pos)
+        k_rope = jax.vmap(
+            lambda cc, new, pp: jax.lax.dynamic_update_slice_in_dim(
+                cc, new, pp, axis=1)
+        )(cache["k_rope"], k_rope, pos)
+        new_cache = {"c": c, "k_rope": k_rope, "pos": pos + s}
+        kv_len = pos + s
+    else:
+        new_cache = None
+        kv_len = None
+
+    k_nope = jnp.einsum("bsk,khn->bhsn", c, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsk,khn->bhsn", c, p["w_uv"].astype(dt))
+
+    scale = (nd + rd) ** -0.5
+    if kv_len is None:
+        # training/prefill: fold [nope | rope] into effective q/k and reuse
+        # the chunked + checkpointed attention core — the full (B,H,S,S)
+        # score tensor is never materialized (EXPERIMENTS.md §Perf, cell 2)
+        from .layers import attention_core
+        from .sharding import constrain
+
+        sk = k_nope.shape[2]
+        k_eff = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, h, sk, rd)).astype(dt)],
+            axis=-1,
+        )
+        q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # the broadcast of the shared rope head replicates the head dim,
+        # which would otherwise pull k_nope out of its head sharding
+        head_ax = ("batch", "heads", None, None)
+        k_eff = constrain(k_eff, mesh, head_ax)
+        q_eff = constrain(q_eff, mesh, head_ax)
+        v = constrain(v, mesh, head_ax)
+        o = attention_core(cfg, q_eff, k_eff, v, scale=scale)
+    else:
+        logits = (
+            jnp.einsum("bhqn,bhkn->bhqk", q_nope.astype(jnp.float32),
+                       k_nope.astype(jnp.float32))
+            + jnp.einsum("bhqr,bzkr->bhqk", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+        ) * scale
+        sk = logits.shape[-1]
+        # kv_len is (B,): new tokens end at each sequence's kv_len
+        qpos = jnp.arange(s)[None, :] + (kv_len[:, None] - s)   # (B, s)
+        mask = qpos[:, :, None] >= jnp.arange(sk)[None, None, :]
+        logits = jnp.where(mask[:, None], logits, -1e30)
+        pattn = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bhkn->bhqn", pattn,
+                       v.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bhsn,hnd->bsd", o, p["wo"].astype(dt))
+    return out, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int) -> Params:
+    m = cfg.mla
+    return {
+        "c": L.zeros((batch, s_max, m.kv_lora_rank), cfg.activation_dtype),
+        "k_rope": L.zeros((batch, 1, s_max, m.qk_rope_head_dim),
+                          cfg.activation_dtype),
+        "pos": L.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_cache_axes(cfg: ModelConfig) -> Params:
+    seq_ax = "seq_model" if cfg.seq_shard_decode else None
+    return {
+        "c": ("batch", seq_ax, None),
+        "k_rope": ("batch", None, seq_ax, None),
+        "pos": ("batch",),
+    }

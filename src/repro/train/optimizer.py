@@ -1,0 +1,202 @@
+"""Optimizers with distributed-state sharding.
+
+AdamW keeps two full-precision moments; with FSDP param sharding the
+moments inherit the same (data x model) sharding => ZeRO-1 for free under
+GSPMD.  Adafactor factors the second moment of >=2D params into row/col
+accumulators — the default for the 400B-class configs where full moments
+do not fit v5e HBM (DESIGN.md §6).
+
+``moment_dtype`` trades optimizer memory for precision (bf16 moments halve
+state bytes; update math is always f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"           # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    # gradient compression applied before the optimizer (bf16 | int8 | none):
+    # bf16/int8 casts make the DP all-reduce run at half/quarter width.
+    grad_compression: str = "none"
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    state_axes: Callable[[Any], Any]  # logical axes tree for the state
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _clip_by_global_norm(grads, max_norm):
+    if max_norm <= 0:
+        return grads
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def compress_grads(grads, mode: str):
+    """Cast/quantize gradients so the DP all-reduce moves fewer bytes.
+
+    int8 uses per-tensor scale + stochastic-free symmetric rounding with
+    error kept in f32 master math (decode immediately after the cast point;
+    XLA places the collective on the narrow dtype)."""
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if mode == "int8":
+        def q(g):
+            gf = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+            return qi.astype(jnp.float32) * scale
+        return jax.tree.map(q, grads)
+    raise ValueError(mode)
+
+
+def make_adamw(cfg: OptimizerConfig) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.asarray(0, jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads = compress_grads(grads, cfg.grad_compression)
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+            vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype),
+                mf.astype(mdt),
+                vf.astype(mdt),
+            )
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    def state_axes(param_axes):
+        return {"m": param_axes, "v": param_axes, "step": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+def make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored second moments (Shazeer & Stern 2018, simplified)."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(one, params),
+            "step": jnp.asarray(0, jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads = compress_grads(grads, cfg.grad_compression)
+        grads = _clip_by_global_norm(grads, cfg.grad_clip)
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(p, g, v):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + 1e-30
+            if _factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                precond = (rms_r[..., None] * vc[..., None, :]) ** -0.5
+                newv = {"vr": vr, "vc": vc}
+            else:
+                newv = {"v": beta * v["v"] + (1 - beta) * g2}
+                precond = newv["v"] ** -0.5
+            u = gf * precond
+            # update clipping (Adafactor's d=1.0 rule)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u)
+            newp = p.astype(jnp.float32) - cfg.lr * u
+            if cfg.weight_decay:
+                newp = newp - cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), newv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"v": new_v, "step": step}
+
+    def state_axes(param_axes):
+        def one(axes):
+            # vr drops the last logical axis, vc the second-to-last
+            if len(axes) >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+
+        is_ax = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+        return {
+            "v": jax.tree.map(one, param_axes, is_leaf=is_ax),
+            "step": (),
+        }
+
+    return Optimizer(init, update, state_axes)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return make_adamw(cfg)
+    if cfg.name == "adafactor":
+        return make_adafactor(cfg)
+    raise ValueError(cfg.name)

@@ -1,0 +1,216 @@
+"""Jittable train / serve steps + their sharding specs.
+
+``make_train_step`` / ``make_prefill_step`` / ``make_decode_step`` build
+the step functions; the ``*_shardings`` helpers map every input/output
+pytree to NamedShardings on a mesh.  The same functions serve the real
+trainer, the examples, and the multi-pod dry-run (which only lowers and
+compiles them).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import (
+    ModelConfig,
+    cache_axes,
+    forward_hidden,
+    init_cache,
+    init_model,
+    lm_loss,
+    logits_last,
+)
+from repro.models import layers as L
+from repro.models.sharding import constrain, logical_to_spec
+from .optimizer import Optimizer
+
+Params = Dict[str, Any]
+
+IS_AX = lambda x: isinstance(x, tuple) and all(
+    isinstance(e, (str, type(None))) for e in x
+)
+
+
+# ----------------------------------------------------------- abstract inits
+def abstract_model(cfg: ModelConfig) -> Tuple[Params, Params]:
+    """(ShapeDtypeStruct params, axes) without allocating anything."""
+    with L.abstract_init():
+        return init_model(cfg, jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int) -> Params:
+    with L.abstract_init():
+        return init_cache(cfg, batch, s_max)
+
+
+# ------------------------------------------------------------------- specs
+def tree_specs(mesh: Mesh, axes_tree, shapes_tree):
+    """logical axes + shapes -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda ax, sd: logical_to_spec(mesh, ax, sd.shape)
+        if hasattr(sd, "shape")
+        else P(),
+        axes_tree,
+        shapes_tree,
+        is_leaf=IS_AX,
+    )
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec_tree(mesh: Mesh, batch_shapes):
+    return jax.tree.map(
+        lambda sd: logical_to_spec(
+            mesh, ("batch",) + (None,) * (len(sd.shape) - 1), sd.shape
+        ),
+        batch_shapes,
+    )
+
+
+def opt_state_specs(mesh: Mesh, opt: Optimizer, params_axes, params_shapes):
+    ax = opt.state_axes(params_axes)
+    shapes = jax.eval_shape(
+        lambda: opt.init(jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                                      params_shapes))
+    )
+    return tree_specs(mesh, ax, shapes), shapes
+
+
+# --------------------------------------------------------------------- train
+def make_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Optional[Mesh] = None,
+                    grad_accum: int = 1):
+    """grad_accum > 1 splits the batch into microbatches and accumulates
+    gradients in a scan — per-microbatch activation/buffer residency drops
+    ~linearly (the lever for memory-bound giant-model train cells,
+    EXPERIMENTS.md §Perf cell 3)."""
+
+    def loss_fn(p, tokens, labels, embeds):
+        h, _ = forward_hidden(cfg, p, tokens, input_embeds=embeds, mesh=mesh)
+        if mesh is not None:
+            h = constrain(h, mesh, ("batch", None, None))
+        return lm_loss(cfg, p, h, labels)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, batch["tokens"], batch["labels"],
+                batch.get("input_embeds"),
+            )
+        else:
+            b = batch["tokens"].shape[0]
+            assert b % grad_accum == 0
+
+            def resh(x):
+                return x.reshape((grad_accum, b // grad_accum) + x.shape[1:])
+
+            mtok = resh(batch["tokens"])
+            mlab = resh(batch["labels"])
+            memb = (resh(batch["input_embeds"])
+                    if "input_embeds" in batch else None)
+
+            def micro(carry, xs):
+                loss_acc, grads_acc = carry
+                if memb is None:
+                    tok, lab = xs
+                    emb = None
+                else:
+                    tok, lab, emb = xs
+                l, g = jax.value_and_grad(loss_fn)(params, tok, lab, emb)
+                grads_acc = jax.tree.map(lambda a, x: a + x, grads_acc, g)
+                return (loss_acc + l, grads_acc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            xs = (mtok, mlab) if memb is None else (mtok, mlab, memb)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.asarray(0.0, jnp.float32), zeros), xs
+            )
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        new_params, new_state = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        ))
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def train_shardings(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    opt: Optimizer,
+    batch_shapes: Dict[str, jax.ShapeDtypeStruct],
+):
+    """Returns (in_specs, out_specs, abstract_args) for jit(train_step)."""
+    p_shapes, p_axes = abstract_model(cfg)
+    pspecs = tree_specs(mesh, p_axes, p_shapes)
+    ospecs, o_shapes = opt_state_specs(mesh, opt, p_axes, p_shapes)
+    bspecs = batch_spec_tree(mesh, batch_shapes)
+    metric_specs = {"loss": P(), "grad_norm": P()}
+    in_specs = (pspecs, ospecs, bspecs)
+    out_specs = (pspecs, ospecs, metric_specs)
+    abstract_args = (p_shapes, o_shapes, batch_shapes)
+    return in_specs, out_specs, abstract_args
+
+
+# --------------------------------------------------------------------- serve
+def make_prefill_step(cfg: ModelConfig, s_max: int, mesh: Optional[Mesh] = None):
+    """tokens (B, S) -> (last-token logits, filled cache)."""
+
+    def prefill_step(params, batch):
+        b = batch["tokens"].shape[0]
+        cache = init_cache(cfg, b, s_max)
+        h, cache = forward_hidden(
+            cfg, params, batch["tokens"], cache=cache,
+            input_embeds=batch.get("input_embeds"), mesh=mesh,
+        )
+        return logits_last(cfg, params, h), cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    """(params, cache, batch{tokens (B,1)}) -> (logits (B,V), new cache)."""
+
+    def decode_step(params, cache, batch):
+        h, cache = forward_hidden(cfg, params, batch["tokens"], cache=cache,
+                                  mesh=mesh)
+        return logits_last(cfg, params, h), cache
+
+    return decode_step
+
+
+def serve_shardings(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    batch_shapes: Dict[str, jax.ShapeDtypeStruct],
+    s_max: int,
+    kind: str,  # "prefill" | "decode"
+):
+    p_shapes, p_axes = abstract_model(cfg)
+    pspecs = tree_specs(mesh, p_axes, p_shapes)
+    bspecs = batch_spec_tree(mesh, batch_shapes)
+    b = jax.tree.leaves(batch_shapes)[0].shape[0]
+    c_shapes = abstract_cache(cfg, b, s_max)
+    cspecs = tree_specs(mesh, cache_axes(cfg), c_shapes)
+    logit_spec = logical_to_spec(mesh, ("batch", "vocab"), (b, cfg.vocab))
+    if kind == "prefill":
+        in_specs = (pspecs, bspecs)
+        abstract_args = (p_shapes, batch_shapes)
+    else:
+        in_specs = (pspecs, cspecs, bspecs)
+        abstract_args = (p_shapes, c_shapes, batch_shapes)
+    out_specs = (logit_spec, cspecs)
+    return in_specs, out_specs, abstract_args

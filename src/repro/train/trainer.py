@@ -1,0 +1,131 @@
+"""Training loop with checkpoint/restart, preemption handling and
+straggler-aware step deadlines.
+
+Runs on any mesh — the CPU examples use a 1x1 mesh; the production launch
+script uses ``make_production_mesh()``.  The loop is deliberately plain:
+all distribution lives in the shardings passed to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.data.lm import lm_batch
+from repro.models import ModelConfig, init_model
+from .checkpoint import CheckpointManager, install_sigterm_handler
+from .optimizer import OptimizerConfig, make_optimizer
+from .steps import (
+    abstract_model,
+    batch_spec_tree,
+    make_train_step,
+    to_named,
+    train_shardings,
+    tree_specs,
+)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    async_checkpoint: bool = True
+    log_every: int = 10
+    # straggler mitigation: if a step exceeds deadline_factor x the median
+    # step time, record it; after `max_slow_steps` consecutive slow steps we
+    # checkpoint immediately so the scheduler can requeue the job elsewhere.
+    deadline_factor: float = 3.0
+    max_slow_steps: int = 3
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainerConfig,
+    ocfg: OptimizerConfig,
+    mesh: Optional[Mesh] = None,
+    log_fn: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    opt = make_optimizer(ocfg)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params, axes = init_model(cfg, key)
+    opt_state = opt.init(params)
+    start_step = 0
+
+    ckpt = CheckpointManager(tcfg.checkpoint_dir) if tcfg.checkpoint_dir else None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        (params, opt_state), start_step, _ = ckpt.restore((params, opt_state))
+        params = jax.tree.map(jax.numpy.asarray, params)
+        opt_state = jax.tree.map(jax.numpy.asarray, opt_state)
+        log_fn(f"[trainer] restored checkpoint at step {start_step}")
+
+    step_fn = make_train_step(cfg, opt, mesh)
+    if mesh is not None and not mesh.empty:
+        batch0 = lm_batch(cfg, tcfg.seed, 0, tcfg.batch, tcfg.seq_len)
+        batch_shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch0
+        )
+        in_specs, out_specs, _ = train_shardings(cfg, mesh, opt, batch_shapes)
+        step_fn = jax.jit(
+            step_fn,
+            in_shardings=to_named(mesh, in_specs),
+            out_shardings=to_named(mesh, out_specs),
+        )
+    else:
+        step_fn = jax.jit(step_fn)
+
+    if ckpt is not None:
+        install_sigterm_handler(
+            lambda: (ckpt.save(int(state_box["step"]),
+                               (state_box["params"], state_box["opt"])),
+                     ckpt.wait())
+        )
+
+    state_box = {"params": params, "opt": opt_state, "step": start_step}
+    losses = []
+    times = []
+    slow = 0
+    for step in range(start_step, tcfg.steps):
+        t0 = time.perf_counter()
+        batch = lm_batch(cfg, tcfg.seed, step, tcfg.batch, tcfg.seq_len)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        losses.append(loss)
+        state_box.update(params=params, opt=opt_state, step=step + 1)
+
+        med = float(np.median(times[-20:]))
+        if len(times) > 5 and dt > tcfg.deadline_factor * med:
+            slow += 1
+            log_fn(f"[trainer] slow step {step}: {dt:.3f}s vs median {med:.3f}s")
+            if slow >= tcfg.max_slow_steps and ckpt is not None:
+                log_fn("[trainer] persistent straggler — checkpointing for requeue")
+                ckpt.save_async(step + 1, (params, opt_state))
+                slow = 0
+        else:
+            slow = 0
+
+        if step % tcfg.log_every == 0:
+            log_fn(f"[trainer] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt is not None and (step + 1) % tcfg.checkpoint_every == 0:
+            (ckpt.save_async if tcfg.async_checkpoint else ckpt.save)(
+                step + 1, (params, opt_state)
+            )
+
+    if ckpt is not None:
+        ckpt.save(tcfg.steps, (params, opt_state))
+        ckpt.wait()
+    return {
+        "params": params,
+        "opt_state": opt_state,
+        "losses": losses,
+        "mean_step_time": float(np.mean(times[1:])) if len(times) > 1 else None,
+    }

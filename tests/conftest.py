@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run against the source tree; smoke tests must see 1 CPU device (the
+# dry-run alone forces 512 — never set that here)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

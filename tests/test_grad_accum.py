@@ -1,0 +1,44 @@
+"""Gradient accumulation must be numerically equivalent to the plain step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.lm import lm_batch
+from repro.models import ModelConfig, init_model
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.steps import make_train_step
+
+
+@pytest.mark.parametrize("accum", [2, 4])
+def test_accum_matches_plain(accum):
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      head_dim=16, d_ff=64, vocab=128,
+                      dtype="float32", param_dtype="float32")
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(OptimizerConfig(lr=1e-3))
+    st = opt.init(params)
+    batch = lm_batch(cfg, 0, 0, 4, 32)
+    p1, _, m1 = jax.jit(make_train_step(cfg, opt))(params, st, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, opt, grad_accum=accum))(
+        params, st, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_accum_with_modality_embeds():
+    cfg = ModelConfig(name="vlm", family="vlm", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab=128, mrope_sections=(2, 3, 3),
+                      dtype="float32", param_dtype="float32")
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(OptimizerConfig(lr=1e-3))
+    st = opt.init(params)
+    batch = lm_batch(cfg, 0, 0, 4, 32)
+    assert "input_embeds" in batch
+    p, _, m = jax.jit(make_train_step(cfg, opt, grad_accum=2))(
+        params, st, batch)
+    assert np.isfinite(float(m["loss"]))

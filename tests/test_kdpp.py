@@ -1,0 +1,84 @@
+"""Fixed-size (k-NDPP) sampling — beyond-paper extension (paper §7
+future work).  Exactness vs enumeration restricted to |Y| = k."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NDPPParams, preprocess
+from repro.core.kdpp import (
+    elementary_symmetric,
+    sample_fixed_size_e,
+    sample_k_ndpp,
+)
+from repro.core.types import dense_l
+
+M, K, KSIZE = 8, 4, 3
+
+
+@pytest.fixture(scope="module")
+def params(rng):
+    return NDPPParams(
+        jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32),
+        jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32),
+        jnp.asarray(rng.normal(size=(K, K)), jnp.float32),
+    )
+
+
+def test_elementary_symmetric_matches_bruteforce(rng):
+    lam = jnp.asarray(rng.uniform(0.1, 2.0, 7), jnp.float32)
+    esp = elementary_symmetric(lam, 3)
+    lam_np = np.asarray(lam, np.float64)
+    for j in (1, 2, 3):
+        brute = sum(
+            np.prod(lam_np[list(c)]) for c in itertools.combinations(range(7), j)
+        )
+        assert float(esp[7, j]) == pytest.approx(brute, rel=1e-4)
+
+
+def test_fixed_size_selection_size_and_marginals(rng):
+    lam = jnp.asarray(rng.uniform(0.1, 2.0, 6), jnp.float32)
+    n = 4000
+    masks = jax.jit(jax.vmap(lambda k: sample_fixed_size_e(lam, 2, k)))(
+        jax.random.split(jax.random.PRNGKey(0), n)
+    )
+    m = np.asarray(masks)
+    assert (m.sum(1) == 2).all()
+    # exact inclusion marginals: P(i in E) ∝ sum over pairs containing i
+    lam_np = np.asarray(lam, np.float64)
+    pair_w = {
+        (i, j): lam_np[i] * lam_np[j]
+        for i in range(6) for j in range(i + 1, 6)
+    }
+    z = sum(pair_w.values())
+    marg = np.zeros(6)
+    for (i, j), w in pair_w.items():
+        marg[i] += w / z
+        marg[j] += w / z
+    assert np.abs(m.mean(0) - marg).max() < 0.05
+
+
+def test_k_ndpp_exact(params):
+    l = np.asarray(dense_l(params), np.float64)
+    probs = {}
+    for y in itertools.combinations(range(M), KSIZE):
+        probs[y] = np.linalg.det(l[np.ix_(y, y)])
+    tot = sum(probs.values())
+    probs = {y: p / tot for y, p in probs.items()}
+
+    sampler = preprocess(params.V, params.B, params.D, block=2)
+    n = 15000
+    res = jax.jit(jax.vmap(lambda k: sample_k_ndpp(sampler, KSIZE, k)))(
+        jax.random.split(jax.random.PRNGKey(1), n)
+    )
+    items = np.asarray(res.items)
+    mask = np.asarray(res.mask)
+    emp = {}
+    for i in range(n):
+        y = tuple(sorted(items[i][mask[i]]))
+        assert len(y) == KSIZE
+        emp[y] = emp.get(y, 0) + 1
+    tv = 0.5 * sum(abs(emp.get(y, 0) / n - p) for y, p in probs.items())
+    assert tv < 0.06

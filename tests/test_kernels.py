@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention import ops as aops
+from repro.kernels.attention.ref import mha_ref
+from repro.kernels.bilinear import ops as bops
+from repro.kernels.bilinear.ref import bilinear_ref
+from repro.kernels.ssd import ops as sops
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.tree_sum import ops as tops
+from repro.kernels.tree_sum.ref import block_outer_sums_ref
+
+
+@pytest.mark.parametrize("m,r", [(64, 8), (100, 40), (512, 200), (33, 7), (8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bilinear(rng, m, r, dtype):
+    z = jnp.asarray(rng.normal(size=(m, r)), dtype)
+    w = jnp.asarray(rng.normal(size=(r, r)), dtype)
+    out = bops.bilinear(z, w, force_interpret=True)
+    ref = bilinear_ref(z, w)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol * max(1, r))
+
+
+@pytest.mark.parametrize("m,blk,r", [(64, 8, 16), (256, 64, 40), (128, 32, 130)])
+def test_tree_sum(rng, m, blk, r):
+    w = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    out = tops.block_outer_sums(w, blk, force_interpret=True)
+    ref = block_outer_sums_ref(w, blk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,s,d", [(1, 4, 2, 128, 64), (2, 4, 4, 256, 64),
+                    (1, 8, 2, 128, 128), (1, 2, 1, 384, 64)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(rng, b, h, kvh, s, d, dtype):
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, kvh, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, kvh, s, d)), dtype)
+    out = aops.mha(q, k, v, causal=True, force_interpret=True)
+    ref = mha_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol * 100, atol=tol * 10,
+    )
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk",
+                         [(2, 64, 2, 16, 8, 16), (1, 128, 4, 32, 16, 32),
+                          (1, 96, 1, 8, 4, 32)])
+def test_ssd(rng, b, s, h, p, n, chunk):
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.7, 1.0, size=(b, s, h)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    y, hl = sops.ssd(x, a, bb, c, chunk=chunk, force_interpret=True)
+    yr, hr = ssd_ref(x, a, bb, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hr), rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_decode_matches_scan(rng):
+    """Stepwise decode must equal the chunked scan."""
+    b, s, h, p, n = 1, 16, 2, 8, 4
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.7, 1.0, size=(b, s, h)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(b, s, h, n)), jnp.float32)
+    y_ref, h_ref = ssd_ref(x, a, bb, c)
+    hstate = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        yt, hstate = sops.ssd_decode_step(x[:, t], a[:, t], bb[:, t], c[:, t], hstate)
+        ys.append(yt)
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hstate), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_gqa_kv_len(rng):
+    """Ragged decode path: kv_len masking matches a truncated dense call."""
+    b, h, kvh, d = 2, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, h, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, kvh, 16, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, kvh, 16, d)), jnp.float32)
+    out = aops.mha(q, k, v, causal=True, kv_len=jnp.asarray([10, 10]))
+    ref = mha_ref(q, k[:, :, :10], v[:, :, :10], causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,141 @@
+"""Optimizers, gradient compression, sharding rules, data determinism,
+and the NDPP serving/data integrations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.models.sharding import logical_to_spec
+from repro.train.optimizer import (
+    OptimizerConfig,
+    compress_grads,
+    make_optimizer,
+)
+
+
+# ------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_descends_quadratic(name):
+    opt = make_optimizer(OptimizerConfig(name=name, lr=0.1, grad_clip=0))
+    params = {"w": jnp.asarray([3.0, -2.0]), "m": jnp.ones((4, 3)) * 2}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["m"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 0.1 * l0
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_grad_compression_close(mode):
+    g = {"a": jnp.asarray(np.random.default_rng(0).normal(size=(128,)),
+                          jnp.float32)}
+    gc = compress_grads(g, mode)
+    err = float(jnp.abs(gc["a"].astype(jnp.float32) - g["a"]).max())
+    assert err < (0.05 if mode == "int8" else 0.02) * float(jnp.abs(g["a"]).max())
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer(OptimizerConfig(name="adafactor"))
+    params = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((7,))}
+    st = opt.init(params)
+    assert set(st["v"]["w"]) == {"vr", "vc"}
+    assert st["v"]["w"]["vr"].shape == (16,)
+    assert st["v"]["w"]["vc"].shape == (8,)
+    assert set(st["v"]["b"]) == {"v"}
+
+
+# ---------------------------------------------------------------- sharding
+def _mesh(shape, axes):
+    return AbstractMesh(shape, axes)
+
+
+def test_logical_to_spec_basics():
+    mesh = _mesh((16, 16), ("data", "model"))
+    assert logical_to_spec(mesh, ("batch", None, None), (256, 4096, 1024)) == \
+        P(("data",), None, None)
+    assert logical_to_spec(mesh, ("fsdp", "ff"), (1024, 4096)) == \
+        P(("data",), "model")
+    # non-divisible TP axis falls back to replication (15 heads on 16-way)
+    assert logical_to_spec(mesh, ("fsdp", "heads", None), (960, 15, 64)) == \
+        P(("data",), None, None)
+    # vocab divisible -> sharded
+    assert logical_to_spec(mesh, ("vocab", "fsdp"), (151936, 2048)) == \
+        P("model", ("data",))
+
+
+def test_logical_to_spec_multipod():
+    mesh = _mesh((2, 16, 16), ("pod", "data", "model"))
+    spec = logical_to_spec(mesh, ("batch", None), (256, 4096))
+    assert spec == P(("pod", "data"), None)
+    # batch not divisible by 32 -> replicated
+    assert logical_to_spec(mesh, ("batch", None), (24, 4096)) == P(None, None)
+
+
+def test_no_axis_reuse_in_one_spec():
+    mesh = _mesh((16, 16), ("data", "model"))
+    spec = logical_to_spec(mesh, ("vocab", "heads"), (1600, 1600))
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used)) <= 1 or used == ["model"]
+
+
+# -------------------------------------------------------------------- data
+def test_lm_batch_deterministic():
+    from repro.data.lm import lm_batch
+    from repro.models import ModelConfig
+
+    cfg = ModelConfig(vocab=512)
+    b1 = lm_batch(cfg, seed=1, step=7, batch=4, seq_len=32)
+    b2 = lm_batch(cfg, seed=1, step=7, batch=4, seq_len=32)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = lm_batch(cfg, seed=1, step=8, batch=4, seq_len=32)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+
+
+# ------------------------------------------------- NDPP framework features
+def test_diverse_token_set():
+    from repro.serve.diverse import diverse_token_set
+
+    rng = np.random.default_rng(0)
+    v = 600
+    logits = jnp.asarray(rng.normal(size=(v,)), jnp.float32)
+    unembed = jnp.asarray(rng.normal(size=(v, 64)), jnp.float32)
+    cand, taken = diverse_token_set(logits, unembed, jax.random.PRNGKey(0),
+                                    n_candidates=128, k_feat=16)
+    assert cand.shape == (128,)
+    assert taken.shape == (128,)
+    assert 0 < int(taken.sum()) < 128
+    assert len(np.unique(np.asarray(cand))) == 128
+
+
+def test_diverse_minibatch():
+    from repro.data.diverse import diverse_minibatch
+
+    rng = np.random.default_rng(0)
+    emb = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    idx, taken = diverse_minibatch(emb, jax.random.PRNGKey(0), target_size=32)
+    n = int(taken.sum())
+    assert 4 <= n <= 128  # around the target, stochastic
+
+
+def test_full_vocab_sampler_reuses_tree():
+    from repro.serve.diverse import FullVocabSampler
+
+    rng = np.random.default_rng(0)
+    m, k = 128, 8
+    v = jnp.asarray(rng.normal(size=(m, k)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(m, k)) * 0.3, jnp.float32)
+    d = jnp.asarray(rng.normal(size=(k, k)), jnp.float32)
+    s = FullVocabSampler(v, b, d, block=16)
+    items, mask, trials = s.sample(jax.random.PRNGKey(0))
+    assert int(trials) >= 1
+    got = np.asarray(items)[np.asarray(mask)]
+    assert len(np.unique(got)) == len(got)  # no duplicates

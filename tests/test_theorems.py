@@ -1,0 +1,117 @@
+"""Property-based validation of the paper's theorems (hypothesis)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NDPPParams,
+    ONDPPParams,
+    d_from_sigma,
+    det_ratio_exact,
+    expected_trials,
+    init_ondpp,
+    marginal_inner,
+    project_constraints,
+    spectral_from_params,
+    youla_decompose,
+)
+from repro.core.types import dense_l, dense_l_hat, dense_l_spectral, x_from_sigma
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _random_params(seed, m, k):
+    rng = np.random.default_rng(seed)
+    return NDPPParams(
+        jnp.asarray(rng.normal(size=(m, k)) * 0.7, jnp.float32),
+        jnp.asarray(rng.normal(size=(m, k)) * 0.7, jnp.float32),
+        jnp.asarray(rng.normal(size=(k, k)), jnp.float32),
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), m=st.integers(4, 12),
+       k=st.sampled_from([2, 4]))
+def test_spectral_reconstruction(seed, m, k):
+    """Youla + eigen split reconstructs L = Z X Z^T exactly (Section 4.1)."""
+    p = _random_params(seed, m, k)
+    sp = spectral_from_params(p.V, p.B, p.D)
+    l1 = np.asarray(dense_l(p), np.float64)
+    l2 = np.asarray(dense_l_spectral(sp), np.float64)
+    assert np.abs(l1 - l2).max() < 1e-3 * max(1.0, np.abs(l1).max())
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), m=st.integers(4, 10),
+       k=st.sampled_from([2, 4]))
+def test_theorem_1(seed, m, k):
+    """det(L_Y) <= det(Lhat_Y) for every subset Y; det(L_Y) >= 0."""
+    p = _random_params(seed, m, k)
+    sp = spectral_from_params(p.V, p.B, p.D)
+    l = np.asarray(dense_l(p), np.float64)
+    lhat = np.asarray(dense_l_hat(sp), np.float64)
+    scale = max(1.0, np.abs(l).max()) ** min(m, 2 * k)
+    for r in range(1, min(m, 2 * k) + 1):
+        for y in itertools.combinations(range(m), r):
+            dl = np.linalg.det(l[np.ix_(y, y)])
+            dh = np.linalg.det(lhat[np.ix_(y, y)])
+            assert dl <= dh + 1e-5 * scale + 1e-6
+            assert dl >= -1e-5 * scale - 1e-6  # PSD-type nonnegativity
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), m=st.integers(6, 40),
+       k=st.sampled_from([2, 4, 6]))
+def test_theorem_2(seed, m, k):
+    """With V ⟂ B: det(Lhat+I)/det(L+I) = prod (1 + 2s/(s^2+1))."""
+    p = init_ondpp(jax.random.PRNGKey(seed), m, k)
+    sp = spectral_from_params(p.V, p.B, d_from_sigma(p.sigma))
+    assert float(expected_trials(sp)) == pytest.approx(
+        float(det_ratio_exact(sp)), rel=1e-3
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), m=st.integers(4, 16),
+       k=st.sampled_from([2, 4]))
+def test_marginal_kernel_identity(seed, m, k):
+    """Eq. (1): K = Z W Z^T equals I - (L+I)^{-1}."""
+    p = _random_params(seed, m, k)
+    z = jnp.concatenate([p.V, p.B], axis=1)
+    x = jnp.zeros((2 * k, 2 * k), jnp.float32)
+    x = x.at[:k, :k].set(jnp.eye(k))
+    x = x.at[k:, k:].set(p.D - p.D.T)
+    w = marginal_inner(z, x)
+    kmat = np.asarray(z @ w @ z.T, np.float64)
+    l = np.asarray(dense_l(p), np.float64)
+    kref = np.eye(m) - np.linalg.inv(l + np.eye(m))
+    assert np.abs(kmat - kref).max() < 1e-3
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_youla_reconstruction(seed):
+    """Algorithm 4: sum_j s_j (y1 y2^T - y2 y1^T) = B(D-D^T)B^T."""
+    rng = np.random.default_rng(seed)
+    m, k = 12, 4
+    b = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    d = jnp.asarray(rng.normal(size=(k, k)), jnp.float32)
+    sig, y = youla_decompose(b, d)
+    sig, y = np.asarray(sig, np.float64), np.asarray(y, np.float64)
+    recon = np.zeros((m, m))
+    for j in range(k // 2):
+        y1, y2 = y[:, 2 * j], y[:, 2 * j + 1]
+        recon += sig[j] * (np.outer(y1, y2) - np.outer(y2, y1))
+    target = np.asarray(b @ (d - d.T) @ b.T, np.float64)
+    assert np.abs(recon - target).max() < 1e-3 * max(1.0, np.abs(target).max())
+
+
+def test_projection_enforces_constraints():
+    p = init_ondpp(jax.random.PRNGKey(0), 50, 8)
+    assert float(jnp.abs(p.B.T @ p.B - jnp.eye(8)).max()) < 1e-5
+    assert float(jnp.abs(p.V.T @ p.B).max()) < 1e-4
+    assert bool((p.sigma >= 0).all())
