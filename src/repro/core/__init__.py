@@ -22,7 +22,9 @@ from .types import (  # noqa: F401
 from .youla import youla_decompose, spectral_from_params  # noqa: F401
 from .cholesky import (  # noqa: F401
     marginal_inner,
+    marginal_inner_from_params,
     sample_cholesky,
+    sample_cholesky_inner,
     sample_cholesky_params,
     sample_cholesky_spectral,
     sample_cholesky_blocked,
@@ -32,7 +34,9 @@ from .tree import (  # noqa: F401
     construct_tree,
     proposal_eigens,
     sample_proposal_dpp,
+    sample_proposal_dpp_batch,
     sample_elementary,
+    sample_elementary_batch,
     sample_elementary_dense,
 )
 from .rejection import (  # noqa: F401
@@ -41,9 +45,13 @@ from .rejection import (  # noqa: F401
     preprocess,
     sample,
     sample_batch,
+    sample_batched,
+    sample_batched_many,
+    auto_n_spec,
     expected_trials,
     det_ratio_exact,
     log_det_ratio,
+    log_det_ratio_batch,
 )
 from .learning import (  # noqa: F401
     Baskets,

@@ -28,13 +28,16 @@ def marginal_inner(Z: jax.Array, X: jax.Array) -> jax.Array:
     return X @ jnp.linalg.inv(jnp.eye(r, dtype=Z.dtype) + g @ X)
 
 
-def marginal_inner_from_params(params: NDPPParams) -> Tuple[jax.Array, jax.Array]:
+def marginal_inner_from_params(
+    params: NDPPParams,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Build (Z, X, W) once from the low-rank parameterization."""
     z = jnp.concatenate([params.V, params.B], axis=1)
     k = params.K
     x = jnp.zeros((2 * k, 2 * k), z.dtype)
     x = x.at[:k, :k].set(jnp.eye(k, dtype=z.dtype))
     x = x.at[k:, k:].set(params.D - params.D.T)
-    return z, marginal_inner(z, x)
+    return z, x, marginal_inner(z, x)
 
 
 def sample_cholesky(
@@ -45,7 +48,13 @@ def sample_cholesky(
     Sequential over M by construction (each inclusion decision conditions
     all later ones); each step is O(K^2) work on a 2K x 2K state.
     """
-    w0 = marginal_inner(Z, X)
+    return sample_cholesky_inner(Z, marginal_inner(Z, X), key)
+
+
+def sample_cholesky_inner(
+    Z: jax.Array, W: jax.Array, key: jax.Array
+) -> jax.Array:
+    """Run the sequential inclusion scan from a precomputed inner matrix W."""
     m = Z.shape[0]
     us = jax.random.uniform(key, (m,), dtype=Z.dtype)
 
@@ -59,17 +68,13 @@ def sample_cholesky(
         q = q - jnp.outer(qz, zq) / denom
         return q, take
 
-    _, taken = jax.lax.scan(step, w0, (Z, us))
+    _, taken = jax.lax.scan(step, W, (Z, us))
     return taken
 
 
 def sample_cholesky_params(params: NDPPParams, key: jax.Array) -> jax.Array:
-    z, _ = marginal_inner_from_params(params)
-    k = params.K
-    x = jnp.zeros((2 * k, 2 * k), z.dtype)
-    x = x.at[:k, :k].set(jnp.eye(k, dtype=z.dtype))
-    x = x.at[k:, k:].set(params.D - params.D.T)
-    return sample_cholesky(z, x, key)
+    z, _, w = marginal_inner_from_params(params)
+    return sample_cholesky_inner(z, w, key)
 
 
 def sample_cholesky_spectral(sp: SpectralNDPP, key: jax.Array) -> jax.Array:

@@ -16,9 +16,16 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .types import SpectralNDPP
-from .tree import SampleTree, construct_tree, proposal_eigens, sample_proposal_dpp
+from .tree import (
+    SampleTree,
+    construct_tree,
+    proposal_eigens,
+    sample_proposal_dpp,
+    sample_proposal_dpp_batch,
+)
 
 
 class RejectionSample(NamedTuple):
@@ -144,3 +151,173 @@ def sample_batch(
     """vmap'd repeated sampling (the tree is reused across draws)."""
     keys = jax.random.split(key, n)
     return jax.vmap(lambda k: sample(sampler, k, max_trials))(keys)
+
+
+# --------------------------------------------------------------------------
+# Speculative batched rejection sampling.
+#
+# The sequential sampler pays E[#trials] *serial* tree descents per sample.
+# Proposals are i.i.d., so a round can draw n_spec of them at once (one
+# batched tree traversal + one batched log-det ratio) and accept the first
+# successful candidate; only requests whose entire batch was rejected loop
+# again, with the batch size doubling up to ``max_spec``.  Taking the first
+# acceptance among i.i.d. proposals in a fixed order is exactly the
+# sequential algorithm, so the sampled distribution is unchanged — and so is
+# the trial count, because proposal t of a request is always generated from
+# fold_in(request_key, t), independent of the batching schedule.
+# --------------------------------------------------------------------------
+
+
+def log_det_ratio_batch(
+    sp: SpectralNDPP, items: jax.Array, mask: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """``log_det_ratio`` over N padded subsets at once.
+
+    items/mask: (N, k_pad).  Returns ((N,) log ratios, (N,) signs): both
+    k_pad x k_pad submatrices are built batched and factored with one
+    batched slogdet instead of N separate ones (vmap lifts the einsums and
+    slogdet of ``log_det_ratio`` to their batched forms).
+    """
+    return jax.vmap(lambda i, m: log_det_ratio(sp, i, m))(items, mask)
+
+
+@jax.jit
+def _spec_round(sampler: NDPPSampler, keys: jax.Array):
+    """One speculative round: draw one proposal per key (batched tree
+    traversal), score all of them with one batched log-det ratio, and flip
+    each acceptance coin.  Returns (items, mask, accept), leading dim N."""
+    ks = jax.vmap(jax.random.split)(keys)
+    items, mask = sample_proposal_dpp_batch(sampler.tree, ks[:, 0])
+    log_ratio, _ = log_det_ratio_batch(sampler.sp, items, mask)
+    u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
+    accept = jnp.log(u) <= log_ratio
+    return items, mask, accept
+
+
+@jax.jit
+def _fanout_keys(req_keys: jax.Array, starts: jax.Array, offsets: jax.Array):
+    """Per-proposal keys: key of proposal t for request i is
+    fold_in(req_keys[i], starts[i] + t).  Returns (P * S, 2)."""
+
+    def per_req(k, s):
+        return jax.vmap(lambda o: jax.random.fold_in(k, s + o))(offsets)
+
+    return jax.vmap(per_req)(req_keys, starts).reshape(-1, req_keys.shape[-1])
+
+
+def auto_n_spec(sampler: NDPPSampler, max_spec: int = 64) -> int:
+    """Speculation depth that accepts most requests in one round: the next
+    power of two >= E[#trials] = det(Lhat+I)/det(L+I), capped at max_spec."""
+    expect = float(det_ratio_exact(sampler.sp))
+    return int(min(max_spec, max(2, 1 << int(np.ceil(np.log2(max(1.0, expect)))))))
+
+
+def sample_batched(
+    sampler: NDPPSampler,
+    key: jax.Array,
+    n_spec: Optional[int] = None,
+    max_trials: int = 1000,
+    grow: int = 2,
+    max_spec: int = 64,
+) -> RejectionSample:
+    """Speculative SAMPLEREJECT for one request: each round draws a batch of
+    ``n_spec`` proposals at once and accepts the first success; the batch
+    doubles (x``grow``, capped at ``max_spec``) after a fully rejected round.
+    Distribution-identical to ``sample`` (see module comment above)."""
+    res = sample_batched_many(
+        sampler, key[None], n_spec=n_spec, max_trials=max_trials,
+        grow=grow, max_spec=max_spec, split_keys=False,
+    )
+    return RejectionSample(
+        items=res.items[0], mask=res.mask[0],
+        trials=res.trials[0], accepted=res.accepted[0],
+    )
+
+
+def sample_batched_many(
+    sampler: NDPPSampler,
+    key: jax.Array,
+    n: Optional[int] = None,
+    n_spec: Optional[int] = None,
+    max_trials: int = 1000,
+    grow: int = 2,
+    max_spec: int = 64,
+    split_keys: bool = True,
+) -> RejectionSample:
+    """Speculative rejection sampling for many requests sharing each round.
+
+    All pending requests contribute ``n_spec`` proposals to one batched tree
+    traversal + one batched log-det ratio per round; a request retires at its
+    first accepted proposal.  Requests that rejected their whole batch stay
+    for the next round with a doubled per-request batch.  The pending set is
+    padded to a power of two so the number of distinct compiled shapes stays
+    logarithmic.
+
+    ``key``: either a single key (``split_keys=True``, split into ``n``
+    request keys) or an (n, 2) array of per-request keys.  ``n_spec=None``
+    auto-sizes the first round to ~E[#trials] (``auto_n_spec``).
+    Returns a stacked RejectionSample with leading dim n.
+    """
+    if n_spec is None:
+        n_spec = auto_n_spec(sampler, max_spec)
+    if split_keys:
+        if n is None:
+            raise ValueError("n is required when passing a single key")
+        req_keys = jax.random.split(key, n)
+    else:
+        req_keys = jnp.asarray(key)
+        n = req_keys.shape[0]
+    r = sampler.tree.R
+
+    items_out = np.full((n, r), -1, np.int32)
+    mask_out = np.zeros((n, r), bool)
+    trials_out = np.zeros((n,), np.int32)
+    acc_out = np.zeros((n,), bool)
+
+    active = np.arange(n)
+    spent = 0                      # identical for every still-active request
+    cur = int(n_spec)
+    while active.size:
+        cur = min(cur, max_spec, max_trials - spent)
+        n_act = int(active.size)
+        n_pad = 1 << max(0, n_act - 1).bit_length()
+        act_keys = jnp.asarray(np.asarray(req_keys)[active])
+        if n_pad > n_act:          # pad with repeats; results are discarded
+            act_keys = jnp.concatenate(
+                [act_keys, jnp.broadcast_to(act_keys[:1], (n_pad - n_act, 2))]
+            )
+        keys = _fanout_keys(
+            act_keys,
+            jnp.full((n_pad,), spent, jnp.uint32),
+            jnp.arange(cur, dtype=jnp.uint32),
+        )
+        items, mask, accept = _spec_round(sampler, keys)
+        acc = np.asarray(accept).reshape(n_pad, cur)[:n_act]
+        items_h = np.asarray(items).reshape(n_pad, cur, r)[:n_act]
+        mask_h = np.asarray(mask).reshape(n_pad, cur, r)[:n_act]
+
+        any_acc = acc.any(axis=1)
+        first = acc.argmax(axis=1)
+        hit = active[any_acc]
+        items_out[hit] = items_h[any_acc, first[any_acc]]
+        mask_out[hit] = mask_h[any_acc, first[any_acc]]
+        trials_out[hit] = spent + first[any_acc] + 1
+        acc_out[hit] = True
+
+        spent += cur
+        miss = ~any_acc
+        if spent >= max_trials:    # exhausted: return last proposal, as
+            left = active[miss]    # the sequential sampler does
+            items_out[left] = items_h[miss, -1]
+            mask_out[left] = mask_h[miss, -1]
+            trials_out[left] = spent
+            break
+        active = active[miss]
+        cur *= grow
+
+    return RejectionSample(
+        items=jnp.asarray(items_out),
+        mask=jnp.asarray(mask_out),
+        trials=jnp.asarray(trials_out),
+        accepted=jnp.asarray(acc_out),
+    )

@@ -177,6 +177,137 @@ def sample_proposal_dpp(
     return sample_elementary(tree, e_mask, k_s)
 
 
+# --------------------------------------------------------------------------
+# Batched traversal: N independent proposals descend the tree together so
+# every step is one (N, R, R)-shaped op (MXU-friendly) instead of N scalar
+# tree walks.  Used by the speculative rejection engine (core.rejection /
+# serve.sampler_engine).
+# --------------------------------------------------------------------------
+
+
+def _leaf_scores_batch(w_blk: jax.Array, q: jax.Array) -> jax.Array:
+    """Leaf scores for N proposals at once: (N, block, R) x (N, R, R) ->
+    (N, block) via the fused bilinear kernel (Pallas on TPU, einsum ref
+    elsewhere)."""
+    try:
+        from repro.kernels.bilinear import ops as _ops
+
+        return _ops.bilinear_batched(w_blk, q)
+    except Exception:  # pragma: no cover - kernel package unavailable
+        return jnp.einsum("nbi,nij,nbj->nb", w_blk, q, w_blk, optimize=True)
+
+
+def _descend_batch(tree: SampleTree, q: jax.Array, us: jax.Array) -> jax.Array:
+    """Root-to-block traversal for N proposals in lockstep.
+
+    q: (N, R, R) per-proposal conditioning projectors; us: (N, depth)
+    uniforms.  Returns the chosen block index per proposal (N,).
+
+    The parent's mass is carried down (p_child = p_left or p_all - p_left)
+    instead of re-gathering the parent node, so each level costs one
+    (N, R, R) gather + one inner product instead of two of each — the
+    gathers dominate HBM traffic at batch size N.  Shallow levels (few
+    distinct nodes shared by all N lanes) are scored against *every* node
+    with one stacked (nodes, R^2) x (R^2, N) matmul instead of per-lane
+    matrix gathers; deep levels (nodes >~ lanes) keep the gather."""
+    n = q.shape[0]
+    r = q.shape[-1]
+    idx = jnp.zeros((n,), jnp.int32)
+    # levels whose whole node set is cheaper to score than to gather per lane
+    shallow = [lvl for lvl in range(1, tree.depth + 1)
+               if tree.levels[lvl].shape[0] <= 32]
+    p_all = jnp.einsum("ij,nij->n", tree.levels[0][0], q)
+    if shallow:
+        stacked = jnp.concatenate(
+            [tree.levels[lvl].reshape(-1, r * r) for lvl in shallow]
+        )                                            # (sum 2^lvl, R^2)
+        all_scores = stacked @ q.reshape(n, r * r).T  # (sum 2^lvl, N)
+        offs = {}
+        off = 0
+        for lvl in shallow:
+            offs[lvl] = off
+            off += tree.levels[lvl].shape[0]
+    for lvl in range(1, tree.depth + 1):
+        if lvl in (offs if shallow else {}):
+            s_l = all_scores[offs[lvl]:offs[lvl] + tree.levels[lvl].shape[0]]
+            p_left = jnp.take_along_axis(s_l.T, (2 * idx)[:, None], axis=1)[:, 0]
+        else:
+            left = tree.levels[lvl][2 * idx]        # (N, R, R) gather
+            p_left = jnp.einsum("nij,nij->n", q, left)
+        go_left = us[:, lvl - 1] * jnp.maximum(p_all, 1e-30) <= jnp.maximum(p_left, 0.0)
+        idx = 2 * idx + jnp.where(go_left, 0, 1)
+        p_all = jnp.maximum(jnp.where(go_left, p_left, p_all - p_left), 0.0)
+    return idx
+
+
+def sample_elementary_batch(
+    tree: SampleTree, e_masks: jax.Array, keys: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """N elementary-DPP draws through the tree in one batched scan.
+
+    e_masks: (N, R) eigenvector selections, keys: (N,) one PRNG key per
+    proposal (so a proposal's draw is independent of how it was batched).
+    Returns (items, mask), each (N, R).  Identical distribution to
+    ``vmap(sample_elementary)`` but leaf scoring runs through the fused
+    (N, block, R) kernel and tree nodes are gathered once per level.
+    """
+    n, r = e_masks.shape
+    n_e = jnp.sum(e_masks.astype(jnp.int32), axis=1)           # (N,)
+    n_e_max = jnp.max(n_e)
+    q0 = e_masks[:, :, None].astype(tree.W.dtype) * jnp.eye(r, dtype=tree.W.dtype)[None]
+    # (r, N, 2): per-proposal, per-step key streams
+    step_keys = jnp.swapaxes(
+        jax.vmap(lambda k: jax.random.split(k, r))(keys), 0, 1
+    )
+    depth = max(tree.depth, 1)
+    blk_ar = jnp.arange(tree.block)
+
+    def cond(state):
+        t, _, _ = state
+        return t < n_e_max  # dynamic trip count: batch's largest |E|, not R
+
+    def body(state):
+        t, q, items = state
+        active = t < n_e                                        # (N,)
+        kk = jax.vmap(jax.random.split)(step_keys[t])           # (N, 2, 2)
+        us = jax.vmap(
+            lambda k: jax.random.uniform(k, (depth,), dtype=tree.W.dtype)
+        )(kk[:, 0])
+        blk = _descend_batch(tree, q, us)                       # (N,)
+        rows = blk[:, None] * tree.block + blk_ar[None, :]      # (N, block)
+        w_blk = tree.W[rows]                                    # (N, block, R)
+        scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
+        j_local = jax.vmap(jax.random.categorical)(
+            kk[:, 1], jnp.log(scores + 1e-30)
+        )
+        j = blk * tree.block + j_local
+        w_j = tree.W[j]                                         # (N, R)
+        qw = jnp.einsum("nij,nj->ni", q, w_j)
+        p = jnp.maximum(jnp.einsum("ni,ni->n", w_j, qw), 1e-30)
+        q_new = q - qw[:, :, None] * qw[:, None, :] / p[:, None, None]
+        q = jnp.where(active[:, None, None], q_new, q)
+        items = items.at[:, t].set(jnp.where(active, j, -1))
+        return t + 1, q, items
+
+    init = (jnp.asarray(0, jnp.int32), q0, -jnp.ones((n, r), jnp.int32))
+    _, _, items = jax.lax.while_loop(cond, body, init)
+    return items, items >= 0
+
+
+def sample_proposal_dpp_batch(
+    tree: SampleTree, keys: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """N draws Y ~ DPP(Lhat), one per key in ``keys`` (N,): batched
+    eigenvector coins, then one batched tree descent for all proposals."""
+    ks = jax.vmap(jax.random.split)(keys)                       # (N, 2, 2)
+    probs = tree.lam / (tree.lam + 1.0)
+    u_e = jax.vmap(
+        lambda k: jax.random.uniform(k, probs.shape, dtype=probs.dtype)
+    )(ks[:, 0])
+    e_masks = u_e < probs[None, :]
+    return sample_elementary_batch(tree, e_masks, ks[:, 1])
+
+
 def sample_elementary_dense(
     W: jax.Array, e_mask: jax.Array, key: jax.Array
 ) -> Tuple[jax.Array, jax.Array]:

@@ -12,8 +12,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from .bilinear import bilinear_pallas
-from .ref import bilinear_ref
+from .bilinear import bilinear_batched_pallas, bilinear_pallas
+from .ref import bilinear_batched_ref, bilinear_ref
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 
@@ -40,3 +40,20 @@ def bilinear(
     wp = jnp.pad(W, ((0, r_pad), (0, r_pad)))
     out = bilinear_pallas(zp, wp, block_m=m_blk, interpret=interpret)
     return out[:m]
+
+
+def bilinear_batched(
+    Z: jax.Array, W: jax.Array, *, force_interpret: bool = False
+) -> jax.Array:
+    """p_{n,b} = z_{n,b}^T W_n z_{n,b}: one (B, R) row block and one (R, R)
+    inner matrix per batch element, fused in a single kernel over the batch."""
+    interpret = force_interpret or _INTERPRET
+    if not (_on_tpu() or interpret):
+        return bilinear_batched_ref(Z, W)
+    n, b, r = Z.shape
+    r_pad = (-r) % 128
+    b_pad = (-b) % 8
+    zp = jnp.pad(Z, ((0, 0), (0, b_pad), (0, r_pad)))
+    wp = jnp.pad(W, ((0, 0), (0, r_pad), (0, r_pad)))
+    out = bilinear_batched_pallas(zp, wp, interpret=interpret)
+    return out[:, :b]

@@ -11,3 +11,12 @@ def bilinear_ref(Z: jax.Array, W: jax.Array) -> jax.Array:
 
 def masked_bilinear_ref(Z: jax.Array, W: jax.Array, mask: jax.Array) -> jax.Array:
     return bilinear_ref(Z, W) * mask.astype(jnp.float32)
+
+
+def bilinear_batched_ref(Z: jax.Array, W: jax.Array) -> jax.Array:
+    """p_{n,b} = z_{n,b}^T W_n z_{n,b}.  Z: (N, B, R), W: (N, R, R) -> (N, B).
+
+    One inner matrix per batch element — the speculative-sampling layout
+    (N proposals, each with its own conditioning projector)."""
+    return jnp.einsum("nbi,nij,nbj->nb", Z.astype(jnp.float32),
+                      W.astype(jnp.float32), Z.astype(jnp.float32))

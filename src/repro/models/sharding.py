@@ -61,7 +61,9 @@ def logical_to_spec(
             out.append(None)
             continue
         used.update(tgt)
-        out.append(tgt[0] if len(tgt) == 1 else tgt)
+        # data-parallel groups stay tuples (("pod", "data") or ("data",)):
+        # the group is one sharding unit even when the pod axis is absent
+        out.append(tgt if ax in _DATA_AXES else (tgt[0] if len(tgt) == 1 else tgt))
     return P(*out)
 
 

@@ -27,6 +27,7 @@ from repro.core import (
     NDPPSampler,
     preprocess,
     sample as rejection_sample,
+    sample_batched_many,
     sample_cholesky,
 )
 from repro.core.types import x_from_sigma
@@ -84,4 +85,10 @@ class FullVocabSampler:
 
     def sample(self, key: jax.Array, max_trials: int = 100):
         res = rejection_sample(self.sampler, key, max_trials=max_trials)
+        return res.items, res.mask, res.trials
+
+    def sample_many(self, key: jax.Array, n: int, max_trials: int = 100):
+        """n draws through the speculative batched engine: all requests
+        share one batched tree traversal + log-det ratio per round."""
+        res = sample_batched_many(self.sampler, key, n, max_trials=max_trials)
         return res.items, res.mask, res.trials

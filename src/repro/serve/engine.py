@@ -53,6 +53,7 @@ class ServeEngine:
         self.slot_budget = np.zeros(n_slots, np.int64)
         self.queue: List[Request] = []
         self.last_token = np.zeros(n_slots, np.int64)
+        self.finished: Dict[int, List[int]] = {}
 
         def decode(params, cache, tokens):
             h, cache = forward_hidden(cfg, params, tokens, cache=cache,
@@ -126,6 +127,7 @@ class ServeEngine:
                 and req.output[-1] == req.eos_id
             )
             if done or self.slot_len[slot] >= self.s_max:
+                self.finished[req.rid] = req.output
                 self.slot_req[slot] = None
 
     def step(self):
@@ -148,15 +150,14 @@ class ServeEngine:
         return True
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:
-        """Drain the queue; returns {rid: generated tokens}."""
-        done: Dict[int, List[int]] = {}
+        """Drain the queue; returns {rid: generated tokens} for every
+        retired request (recorded at retire time), plus any request still
+        occupying a slot when max_ticks runs out."""
         for _ in range(max_ticks):
             progressed = self.step()
-            for req in list(self.queue):
-                pass
             if not progressed and not self.queue:
                 break
-        # collect whatever finished
+        done = dict(self.finished)
         for slot in range(self.n_slots):
             req = self.slot_req[slot]
             if req is not None:

@@ -1,0 +1,100 @@
+"""Deterministic stand-in for the small `hypothesis` surface these tests use.
+
+The property tests import ``given / settings / assume / strategies`` only.
+When the real hypothesis is installed (CI installs it from pyproject.toml)
+it is used; in environments without it, this shim runs each property as
+``max_examples`` deterministic random examples (seeded per test name) so
+the suite still collects and the properties still get exercised.  No
+shrinking, no database — just example generation and ``assume`` filtering.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False): discard the current example."""
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elems = list(elements)
+        return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+st = strategies
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_max_examples", 10)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            ran = 0
+            # allow up to 10x draws so assume() rejections don't starve us
+            for _ in range(max_examples * 10):
+                if ran >= max_examples:
+                    break
+                drawn = {name: s.example(rng) for name, s in strats.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise RuntimeError(
+                    f"{fn.__name__}: assume() rejected every generated "
+                    "example — the property never ran"
+                )
+            return None
+
+        # hide the strategy-supplied params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        wrapper.is_hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def settings(**kwargs):
+    def deco(fn):
+        if kwargs.get("max_examples"):
+            fn._max_examples = int(kwargs["max_examples"])
+        return fn
+
+    return deco

@@ -1,0 +1,187 @@
+"""Exactness of the speculative batched rejection sampler.
+
+The batched engine must be distribution-identical to the sequential
+sampler: same subset-frequency histogram (chi-square tolerance against the
+enumerated distribution, TV agreement with the sequential empirical
+histogram), and trial counts that match the Theorem-2 rate for an ONDPP
+kernel.  Also covers the slot-pool SamplerEngine: every retired request is
+returned, and a request's draw is independent of pool scheduling.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    NDPPParams,
+    NDPPSampler,
+    construct_tree,
+    d_from_sigma,
+    det_ratio_exact,
+    expected_trials,
+    init_ondpp,
+    preprocess,
+    proposal_eigens,
+    sample_batch,
+    sample_batched,
+    sample_batched_many,
+    spectral_from_params,
+)
+from repro.core.types import dense_l
+from repro.serve.sampler_engine import SampleRequest, SamplerEngine
+
+M, K = 8, 4
+N_SAMPLES = 8000
+
+
+@pytest.fixture(scope="module")
+def params(rng):
+    v = jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32)
+    d = jnp.asarray(rng.normal(size=(K, K)), jnp.float32)
+    return NDPPParams(v, b, d)
+
+
+@pytest.fixture(scope="module")
+def sampler(params):
+    return preprocess(params.V, params.B, params.D, block=2)
+
+
+@pytest.fixture(scope="module")
+def exact_probs(params):
+    l = np.asarray(dense_l(params), np.float64)
+    norm = np.linalg.det(l + np.eye(M))
+    probs = {}
+    for r in range(M + 1):
+        for y in itertools.combinations(range(M), r):
+            sub = l[np.ix_(list(y), list(y))]
+            probs[y] = (np.linalg.det(sub) if y else 1.0) / norm
+    return probs
+
+
+def _histogram(items, mask):
+    emp = {}
+    for i in range(len(items)):
+        y = tuple(sorted(items[i][mask[i]]))
+        emp[y] = emp.get(y, 0) + 1
+    return emp
+
+
+def _tv(a, b, n):
+    keys = set(a) | set(b)
+    return 0.5 * sum(abs(a.get(y, 0) - b.get(y, 0)) / n for y in keys)
+
+
+def test_batched_matches_sequential_histogram(sampler, exact_probs):
+    """sample_batched_many and the sequential sampler draw from the same
+    subset distribution."""
+    bat = sample_batched_many(sampler, jax.random.PRNGKey(3), N_SAMPLES,
+                              n_spec=4)
+    assert bool(np.asarray(bat.accepted).all())
+    emp_b = _histogram(np.asarray(bat.items), np.asarray(bat.mask))
+    # no impossible subsets
+    assert set(emp_b) <= set(exact_probs)
+
+    # chi-square against the enumerated distribution over well-populated
+    # bins (expected count >= 5, rare subsets pooled into one bin)
+    chi2, dof, rare_obs, rare_p = 0.0, 0, 0, 0.0
+    for y, p in exact_probs.items():
+        exp = N_SAMPLES * p
+        if exp >= 5.0:
+            chi2 += (emp_b.get(y, 0) - exp) ** 2 / exp
+            dof += 1
+        else:
+            rare_obs += emp_b.get(y, 0)
+            rare_p += p
+    if rare_p > 0:
+        exp = N_SAMPLES * rare_p
+        chi2 += (rare_obs - exp) ** 2 / exp
+        dof += 1
+    dof -= 1
+    # ~5 sigma above the chi-square mean: loose enough for MC, tight enough
+    # to catch a wrong sampler
+    assert chi2 < dof + 5.0 * np.sqrt(2.0 * dof), (chi2, dof)
+
+    # and the two empirical histograms agree with each other
+    seq = jax.jit(lambda k: sample_batch(sampler, k, N_SAMPLES))(
+        jax.random.PRNGKey(4)
+    )
+    emp_s = _histogram(np.asarray(seq.items), np.asarray(seq.mask))
+    assert _tv(emp_b, emp_s, N_SAMPLES) < 0.08
+
+
+def test_batched_trials_match_expected_ondpp():
+    """For an ONDPP kernel (V ⟂ B) the mean trial count of the batched
+    sampler matches Theorem 2's det(Lhat+I)/det(L+I) rate."""
+    p = init_ondpp(jax.random.PRNGKey(7), 64, 4)
+    sp = spectral_from_params(p.V, p.B, d_from_sigma(p.sigma))
+    lam, w = proposal_eigens(sp)
+    sampler = NDPPSampler(sp=sp, tree=construct_tree(lam, w, block=8))
+    res = sample_batched_many(sampler, jax.random.PRNGKey(8), 2000, n_spec=4)
+    assert bool(np.asarray(res.accepted).all())
+    expect = float(expected_trials(sp))
+    assert expect == pytest.approx(float(det_ratio_exact(sp)), rel=1e-3)
+    assert float(np.mean(np.asarray(res.trials))) == pytest.approx(
+        expect, rel=0.1
+    )
+
+
+def test_single_request_speculative(sampler):
+    """sample_batched (one request, doubling rounds) returns a valid draw
+    with trials counted in proposal order."""
+    res = sample_batched(sampler, jax.random.PRNGKey(11), n_spec=2,
+                         max_spec=8)
+    assert bool(res.accepted)
+    assert int(res.trials) >= 1
+    items = np.asarray(res.items)
+    mask = np.asarray(res.mask)
+    assert (items[mask] >= 0).all() and (items[mask] < M).all()
+
+
+def test_sampler_engine_returns_all_requests(sampler):
+    """Every retired request appears in run()'s output, outputs recorded at
+    retire time; draws are schedule-independent (engine == standalone)."""
+    eng = SamplerEngine(sampler, n_slots=3, n_spec=4)
+    n_req = 10
+    for i in range(n_req):
+        eng.submit(SampleRequest(rid=i, seed=1000 + i))
+    out = eng.run()
+    assert sorted(out) == list(range(n_req))
+    assert all(out[i].accepted for i in range(n_req))
+    # schedule independence: the engine's draw for a seed equals the
+    # standalone speculative sampler's draw for the same key
+    solo = sample_batched(sampler, jax.random.PRNGKey(1004), n_spec=4)
+    assert np.array_equal(out[4].items, np.asarray(solo.items))
+    assert out[4].trials == int(solo.trials)
+
+
+def test_sampler_engine_respects_max_trials(sampler):
+    """A request's budget caps which proposals can be accepted mid-tick:
+    with max_trials=3 and n_spec=4 the engine must agree with the
+    standalone sampler on items, trials, and the accepted flag."""
+    eng = SamplerEngine(sampler, n_slots=2, n_spec=4)
+    seeds = list(range(20, 28))
+    for i, s in enumerate(seeds):
+        eng.submit(SampleRequest(rid=i, seed=s, max_trials=3))
+    out = eng.run()
+    for i, s in enumerate(seeds):
+        solo = sample_batched_many(
+            sampler, jax.random.PRNGKey(s)[None], n_spec=4, max_trials=3,
+            split_keys=False,
+        )
+        assert out[i].accepted == bool(solo.accepted[0]), (i, s)
+        assert out[i].trials == int(solo.trials[0]) <= 3, (i, s)
+        assert np.array_equal(out[i].items, np.asarray(solo.items[0])), (i, s)
+
+
+def test_sampler_engine_continuous_admission(sampler):
+    """Requests submitted mid-run are admitted into freed slots."""
+    eng = SamplerEngine(sampler, n_slots=2, n_spec=4)
+    eng.submit(SampleRequest(rid=0, seed=1))
+    eng.submit(SampleRequest(rid=1, seed=2))
+    eng.step()
+    eng.submit(SampleRequest(rid=2, seed=3))
+    out = eng.run()
+    assert sorted(out) == [0, 1, 2]

@@ -3,7 +3,10 @@ conditional scores must equal brute-force determinant ratios."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import assume, given, settings, strategies as st
+try:
+    from hypothesis import assume, given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs the real hypothesis
+    from _hypothesis_fallback import assume, given, settings, strategies as st
 
 from repro.core import NDPPParams, greedy_map, next_item_scores
 from repro.core.types import dense_l

@@ -7,7 +7,7 @@ import pytest
 from repro.kernels.attention import ops as aops
 from repro.kernels.attention.ref import mha_ref
 from repro.kernels.bilinear import ops as bops
-from repro.kernels.bilinear.ref import bilinear_ref
+from repro.kernels.bilinear.ref import bilinear_batched_ref, bilinear_ref
 from repro.kernels.ssd import ops as sops
 from repro.kernels.ssd.ref import ssd_ref
 from repro.kernels.tree_sum import ops as tops
@@ -24,6 +24,17 @@ def test_bilinear(rng, m, r, dtype):
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=tol, atol=tol * max(1, r))
+
+
+@pytest.mark.parametrize("n,b,r", [(4, 8, 16), (16, 64, 64), (3, 5, 40)])
+def test_bilinear_batched(rng, n, b, r):
+    """Per-element inner matrices: the speculative leaf-scoring layout."""
+    z = jnp.asarray(rng.normal(size=(n, b, r)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, r, r)), jnp.float32)
+    out = bops.bilinear_batched(z, w, force_interpret=True)
+    ref = bilinear_batched_ref(z, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4 * max(1, r))
 
 
 @pytest.mark.parametrize("m,blk,r", [(64, 8, 16), (256, 64, 40), (128, 32, 130)])

@@ -52,7 +52,8 @@ def test_adafactor_state_is_factored():
 
 # ---------------------------------------------------------------- sharding
 def _mesh(shape, axes):
-    return AbstractMesh(shape, axes)
+    # AbstractMesh takes a ((name, size), ...) shape tuple
+    return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_logical_to_spec_basics():

@@ -56,6 +56,22 @@ def test_slot_isolation_matches_solo(setup):
         assert r.output == expect, (r.rid, r.output, expect)
 
 
+def test_run_returns_all_retired_outputs(setup):
+    """run() must return outputs for every request, including those retired
+    mid-run (regression: `done` used to only collect still-occupied slots)."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(cfg, params, n_slots=2, s_max=64)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, size=5),
+                    max_new_tokens=3) for i in range(6)]
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run()
+    assert sorted(out) == [r.rid for r in reqs]
+    for r in reqs:
+        assert out[r.rid] == r.output
+
+
 def test_engine_drains_queue(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)
