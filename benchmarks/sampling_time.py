@@ -8,9 +8,19 @@ K = 100; on this CPU container we sweep M = 2^8 .. 2^14 with K
 configurable so the curves (linear vs sublinear in M) are measurable in
 reasonable time — the asymptotics, not absolute numbers, reproduce
 Fig. 2(a)/(b).
+
+``--mode mcmc`` additionally sweeps the third backend (``core.mcmc``
+up/down chains, per-step cost O(K^2) independent of the rejection rate)
+against Cholesky and rejection per-sample latency.
+
+Every run emits a machine-readable ``BENCH_sampling.json`` (``--out``):
+``{"meta": {...}, "modes": {mode: [row, ...]}}`` with wall ms, samples/s,
+and trials/steps per row, so the repo's perf trajectory is diffable
+across PRs.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict, List
 
@@ -24,6 +34,7 @@ from repro.core import (
     sample as rejection_sample,
     sample_batched_many,
     sample_cholesky_spectral,
+    sample_mcmc,
     spectral_from_params,
     det_ratio_exact,
 )
@@ -153,17 +164,108 @@ def run_batched(ms: List[int] = None, k: int = 32, n_requests: int = 64,
     return rows
 
 
+def run_mcmc(ms: List[int] = None, k: int = 32, n_samples: int = 64,
+             burn_in: int = 256, thin: int = 16):
+    """Per-sample latency of all three backends: Cholesky (O(MK^2) exact),
+    rejection (sublinear, rate-dependent), MCMC (rate-independent,
+    O(K^2)/step — ``burn_in + thin`` steps buy the first sample of a chain,
+    ``thin`` steps every further one)."""
+    ms = ms or [2 ** 10, 2 ** 12]
+    rows = []
+    for m in ms:
+        v, b, d = synthetic_features(m, k // 2, seed=0)
+        scale = 1.0 / np.sqrt(m)
+        v, b = v * scale, b * scale
+        sampler = preprocess(v, b, d, block=64)
+        sp = sampler.sp
+
+        chol = jax.jit(lambda key: sample_cholesky_spectral(sp, key))
+        t_chol = _time(lambda: jax.block_until_ready(
+            chol(jax.random.PRNGKey(0))))
+
+        rej = jax.jit(lambda key: rejection_sample(sampler, key, 200))
+        t_rej = _time(lambda: jax.block_until_ready(
+            rej(jax.random.PRNGKey(1)).items))
+
+        n_chains = min(16, n_samples)
+        res = {}
+
+        def mc():
+            res["s"] = sample_mcmc(sp, jax.random.PRNGKey(2), n_samples,
+                                   n_chains=n_chains, burn_in=burn_in,
+                                   thin=thin)
+            jax.block_until_ready(res["s"].items)
+
+        t_mc = _time(mc) / n_samples
+        steps_per_sample = (burn_in + thin * (n_samples // n_chains)) \
+            * n_chains / n_samples
+        row = dict(M=m, K=k, cholesky_ms=t_chol * 1e3,
+                   rejection_ms=t_rej * 1e3, mcmc_ms=t_mc * 1e3,
+                   cholesky_sps=1.0 / t_chol, rejection_sps=1.0 / t_rej,
+                   mcmc_sps=1.0 / t_mc,
+                   mcmc_steps_per_sample=steps_per_sample,
+                   mcmc_accept_rate=float(res["s"].accept_rate),
+                   expected_trials=float(det_ratio_exact(sp)))
+        rows.append(row)
+        print(
+            f"M=2^{int(np.log2(m)):2d} chol={row['cholesky_ms']:8.1f}ms "
+            f"rej={row['rejection_ms']:8.1f}ms mcmc={row['mcmc_ms']:8.1f}ms "
+            f"({row['mcmc_steps_per_sample']:5.0f} steps/sample, "
+            f"accept {row['mcmc_accept_rate']:.2f}) "
+            f"trials~{row['expected_trials']:5.2f}"
+        )
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["latency", "batched", "both"],
+    ap.add_argument("--mode",
+                    choices=["latency", "batched", "mcmc", "both", "all"],
                     default="both")
     ap.add_argument("--n-requests", type=int, default=64)
     ap.add_argument("--n-spec", type=int, default=None,
                     help="speculation depth (default: auto ~ E[#trials])")
+    ap.add_argument("--out", default="BENCH_sampling.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
-    if args.mode in ("latency", "both"):
-        run()
-    if args.mode in ("batched", "both"):
-        run_batched(n_requests=args.n_requests, n_spec=args.n_spec)
+    modes = {
+        "latency": ("latency",),
+        "batched": ("batched",),
+        "mcmc": ("mcmc",),
+        "both": ("latency", "batched"),
+        "all": ("latency", "batched", "mcmc"),
+    }[args.mode]
+    results: Dict[str, List[Dict]] = {}
+    if "latency" in modes:
+        results["latency"] = run()
+    if "batched" in modes:
+        results["batched"] = run_batched(n_requests=args.n_requests,
+                                         n_spec=args.n_spec)
+    if "mcmc" in modes:
+        results["mcmc"] = run_mcmc()
+    if args.out:
+        # merge into any existing file so a partial-mode run never drops
+        # another mode's tracked rows (e.g. `--mode batched` keeps the
+        # committed mcmc sweep)
+        merged: Dict[str, List[Dict]] = {}
+        try:
+            with open(args.out) as f:
+                merged = json.load(f).get("modes", {})
+        except (OSError, ValueError):
+            pass
+        merged.update(results)
+        payload = {
+            "meta": {
+                "bench": "sampling_time",
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "unix_time": int(time.time()),
+                "args": vars(args),
+            },
+            "modes": merged,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out} (modes: {', '.join(merged)})")

@@ -1,0 +1,63 @@
+"""The MCMC backend rescuing an unconstrained NDPP kernel.
+
+Builds a kernel whose rejection rate det(Lhat+I)/det(L+I) is in the
+thousands (tiny symmetric part, many Youla pairs with sigma ~ 1 — the
+regime Theorem 2's ONDPP bound does not cover), shows the rejection
+sampler burning its whole trial budget, then draws from the same kernel
+with the up/down Metropolis chain and the slot-pool engine's
+``backend="mcmc"`` — whose per-step cost depends only on the kernel rank.
+
+Run:  PYTHONPATH=src python examples/mcmc_sampling.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    d_from_sigma,
+    det_ratio_exact,
+    preprocess,
+    sample_batched_many,
+    sample_mcmc,
+)
+from repro.serve.sampler_engine import SampleRequest, SamplerEngine
+
+
+def main():
+    m, k = 64, 24
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(m, k)) * 0.05, jnp.float32)
+    b = jnp.asarray(np.linalg.qr(rng.normal(size=(m, k)))[0], jnp.float32)
+    d = d_from_sigma(jnp.ones((k // 2,), jnp.float32))
+    sampler = preprocess(v, b, d, block=8)
+
+    expect = float(det_ratio_exact(sampler.sp))
+    print(f"unconstrained kernel: E[rejection trials] ~ {expect:.0f}")
+
+    rej = sample_batched_many(sampler, jax.random.PRNGKey(0), 8,
+                              n_spec=8, max_trials=64)
+    n_ok = int(np.asarray(rej.accepted).sum())
+    print(f"rejection backend, max_trials=64: {n_ok}/8 accepted")
+
+    res = sample_mcmc(sampler.sp, jax.random.PRNGKey(1), 8,
+                      burn_in=256, thin=16)
+    print(f"mcmc backend: 8/8 drawn, accept rate "
+          f"{float(res.accept_rate):.2f}")
+    for i in range(4):
+        y = sorted(int(j) for j in
+                   np.asarray(res.items[i])[np.asarray(res.mask[i])])
+        print(f"  sample {i}: {y}")
+
+    # same thing through the serving engine: slot = chain
+    eng = SamplerEngine(sampler, n_slots=4, backend="mcmc",
+                        mcmc_burn_in=256, mcmc_thin=16)
+    for i in range(8):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    out = eng.run()
+    sizes = [int(out[i].mask.sum()) for i in sorted(out)]
+    print(f"SamplerEngine(backend='mcmc'): {len(out)}/8 retired in "
+          f"{eng.ticks} ticks, sizes {sizes}")
+
+
+if __name__ == "__main__":
+    main()

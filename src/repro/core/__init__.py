@@ -6,6 +6,7 @@ Public API:
   cholesky   — linear-time O(M K^2) exact sampler (Alg. 1 RHS)
   tree       — proposal eigens + flat tree + elementary DPP sampling (Alg. 3)
   rejection  — sublinear-time rejection sampler (Alg. 2) + Theorem 2 rates
+  mcmc       — exact-target up/down/swap Metropolis chains, O(K^2)/step
   learning   — ONDPP objective (Eq. 14) + baselines + constraint projection
   map_inference — greedy conditioning / MPR
 """
@@ -71,7 +72,21 @@ from .map_inference import (  # noqa: F401
 )
 from .kdpp import (  # noqa: F401
     elementary_symmetric,
+    elementary_symmetric_log,
     sample_fixed_size_e,
     sample_kdpp,
     sample_k_ndpp,
+)
+from .mcmc import (  # noqa: F401
+    MCMCSample,
+    MCMCState,
+    add_ratio,
+    init_empty,
+    init_greedy,
+    remove_ratio,
+    run_chains,
+    sample_mcmc,
+    score_matrix,
+    swap_ratio,
+    swap_score_matrix,
 )

@@ -27,17 +27,39 @@ from .tree import SampleTree, sample_elementary
 
 
 def elementary_symmetric(lam: jax.Array, k: int) -> jax.Array:
-    """ESP table E[i, j] = e_j(λ_1..λ_i), shape (N+1, k+1), f64-free but
-    stabilized by per-row rescaling is unnecessary for K <= a few hundred
-    eigenvalues in f32 when λ are O(1); computed in f32 cumulatively."""
-    n = lam.shape[0]
+    """ESP table E[i, j] = e_j(λ_1..λ_i), shape (N+1, k+1), computed in
+    the input dtype cumulatively.  Fine for small tables, but e_j grows
+    like C(N, j) ~ overflow for f32 once N, j reach the hundreds — use
+    ``elementary_symmetric_log`` for large-K selection."""
     row0 = jnp.zeros((k + 1,), lam.dtype).at[0].set(1.0)
 
     def step(prev, lam_i):
         shifted = jnp.concatenate([jnp.zeros((1,), lam.dtype), prev[:-1]])
-        return prev + lam_i * shifted, prev + lam_i * shifted
+        nxt = prev + lam_i * shifted
+        return nxt, nxt
 
     _, rows = jax.lax.scan(step, row0, lam)
+    return jnp.concatenate([row0[None], rows], axis=0)  # (N+1, k+1)
+
+
+def elementary_symmetric_log(lam: jax.Array, k: int) -> jax.Array:
+    """log ESP table: E[i, j] = log e_j(λ_1..λ_i) (-inf where e_j = 0).
+
+    The recurrence e_j(λ_{≤i}) = e_j(λ_{<i}) + λ_i e_{j-1}(λ_{<i}) becomes a
+    logaddexp, so the table never overflows: e_j ~ C(N, j) λ^j exceeds the
+    f32 max (~3e38) already at N = 256, j = 32 with λ = O(1), while its log
+    stays ~90.  Requires λ >= 0 (true for the proposal spectrum)."""
+    neg_inf = jnp.asarray(-jnp.inf, lam.dtype)
+    log_lam = jnp.where(lam > 0, jnp.log(jnp.maximum(lam, 1e-30)), neg_inf)
+    row0 = jnp.full((k + 1,), neg_inf, lam.dtype).at[0].set(0.0)
+
+    def step(prev, ll_i):
+        shifted = jnp.concatenate([jnp.full((1,), neg_inf, lam.dtype),
+                                   prev[:-1]])
+        nxt = jnp.logaddexp(prev, ll_i + shifted)
+        return nxt, nxt
+
+    _, rows = jax.lax.scan(step, row0, log_lam)
     return jnp.concatenate([row0[None], rows], axis=0)  # (N+1, k+1)
 
 
@@ -45,17 +67,20 @@ def sample_fixed_size_e(lam: jax.Array, k: int, key: jax.Array) -> jax.Array:
     """Exact size-k eigenvector selection (Kulesza & Taskar Alg. 8).
 
     Returns a boolean mask over the N eigenvalues with exactly k True
-    (assuming e_k > 0; ill-conditioned spectra fall back to top-k)."""
+    (assuming e_k > 0; ill-conditioned spectra fall back to top-k).  Walks
+    the log-space ESP table so large-N/large-k spectra cannot overflow."""
     n = lam.shape[0]
-    esp = elementary_symmetric(lam, k)  # (N+1, k+1)
+    esp = elementary_symmetric_log(lam, k)  # (N+1, k+1) log-space
     us = jax.random.uniform(key, (n,), dtype=lam.dtype)
 
     def step(carry, i):
         rem = carry  # how many still to pick
         idx = n - 1 - i  # walk from the last eigenvalue down
         denom = esp[idx + 1, rem]
-        num = lam[idx] * esp[idx, jnp.maximum(rem - 1, 0)]
-        p = jnp.where(denom > 0, num / jnp.maximum(denom, 1e-30), 0.0)
+        num = jnp.log(jnp.maximum(lam[idx], 1e-30)) + \
+            esp[idx, jnp.maximum(rem - 1, 0)]
+        p = jnp.where(
+            (lam[idx] > 0) & jnp.isfinite(denom), jnp.exp(num - denom), 0.0)
         take = (us[i] < p) & (rem > 0)
         # if remaining picks == remaining items, we must take
         take = take | (rem >= idx + 1)

@@ -1,0 +1,49 @@
+"""jit'd public wrapper for the MCMC all-candidate scorer.
+
+Pads to TPU-aligned shapes (rows to block_m, feature dim to a multiple of
+128 lanes) and falls back to the einsum oracle off-TPU
+(``REPRO_PALLAS_INTERPRET=1`` / ``force_interpret`` runs the kernel in
+interpreter mode instead).  Per-chain candidate *rows* (instead of the
+shared ground set) are the ``kernels.bilinear.ops.bilinear_batched``
+layout — use that op directly.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .mcmc_score import score_all_pallas
+from .ref import score_all_ref
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def score_all(
+    Z: jax.Array, A: jax.Array, *, block_m: int = 512,
+    force_interpret: bool = False,
+) -> jax.Array:
+    """s_{c,m} = z_m^T A_c z_m for every item m and chain c.
+
+    Z: (M, R) ground-set features, A: (C, R, R) per-chain score matrices
+    -> (C, M) float32 move scores (add ratios, or swap ratios when A is a
+    swap score matrix)."""
+    interpret = force_interpret or _INTERPRET
+    if not (_on_tpu() or interpret):
+        return score_all_ref(Z, A)
+    m, r = Z.shape
+    r_pad = (-r) % 128
+    m_blk = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    m_pad = (-m) % m_blk
+    zp = jnp.pad(Z, ((0, m_pad), (0, r_pad)))
+    ap = jnp.pad(A, ((0, 0), (0, r_pad), (0, r_pad)))
+    out = score_all_pallas(zp, ap, block_m=m_blk, interpret=interpret)
+    return out[:, :m]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the MCMC candidate-move scorer.
+
+Every MCMC move ratio is a bilinear form z^T A z against a per-chain
+(2K x 2K) score matrix A (add: A = X - X G X; swap against a fixed slot:
+A = P_ss (X - X G X) + p q^T — see ``core.mcmc``), so scoring candidates
+reduces to batched quadratic forms.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def score_all_ref(Z: jax.Array, A: jax.Array) -> jax.Array:
+    """s_{c,m} = z_m^T A_c z_m.  Z: (M, R) shared rows, A: (C, R, R)
+    per-chain score matrices -> (C, M)."""
+    return jnp.einsum("mi,cij,mj->cm", Z.astype(jnp.float32),
+                      A.astype(jnp.float32), Z.astype(jnp.float32))

@@ -1,36 +1,51 @@
-"""Slot-based batched serving engine for NDPP rejection sampling.
+"""Slot-based batched serving engine for NDPP sampling (two backends).
 
 The LM serving engine (``serve.engine``) keeps a fixed pool of request
 slots so decode batches stay full without recompiling; this engine applies
-the same pattern to the paper's rejection sampler.  A fixed pool of
-``n_slots`` sampling requests shares ONE jitted speculative round per tick:
-every occupied slot contributes ``n_spec`` i.i.d. proposals to a single
-batched tree traversal + batched log-det ratio (``core.rejection._spec_round``),
-so many concurrent requests with *different* keys share each compiled batch.
-A slot retires at its first accepted proposal (outputs are recorded at
-retire time) and a queued request is admitted into the freed slot, keeping
-the batch full under sustained traffic.
+the same pattern to the paper's samplers.
+
+``backend="rejection"`` (default): a fixed pool of ``n_slots`` sampling
+requests shares ONE jitted speculative round per tick — every occupied slot
+contributes ``n_spec`` i.i.d. proposals to a single batched tree traversal
++ batched log-det ratio (``core.rejection._spec_round``).  A slot retires
+at its first accepted proposal.
+
+``backend="mcmc"``: slot = chain.  Every occupied slot is an independent
+up/down (or fixed-size swap) Metropolis chain (``core.mcmc``); one jitted
+vmapped call advances the whole pool ``mcmc_steps_per_tick`` steps per
+tick, and a slot retires with the chain state at step ``burn_in + thin``.
+This is the backend of last resort for *unconstrained* NDPP kernels, where
+the rejection rate is unbounded and the rejection backend can exhaust
+``max_trials`` without accepting: MCMC per-step cost depends only on the
+kernel rank, never on the rejection rate.
 
 Exactness: proposal t of request ``rid`` is always generated from
-``fold_in(request_key, t)``, so the draw a request receives is independent
-of pool occupancy, admission order, and n_spec — it is the same sequence
-the standalone sampler would consume.
+``fold_in(request_key, t)`` (rejection), and MH step t of a chain from
+``fold_in(chain_key, t)`` (MCMC), so the draw a request receives is
+independent of pool occupancy, admission order, n_spec, and tick size — it
+is the same sequence the standalone sampler would consume.  (For MCMC the
+inverse-cache refresh fires on the absolute schedule ``step %
+refresh_every == 0``, so this holds bit-exactly for tick sizes dividing
+``mcmc_refresh_every``; other tick sizes refresh less often, which only
+changes float drift, never the chain's exact-arithmetic trajectory.)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mcmc as mcmc_core
 from repro.core.rejection import (
     NDPPSampler,
     _fanout_keys,
     _spec_round,
     auto_n_spec,
 )
+from repro.core.types import SpectralNDPP
 
 
 @dataclasses.dataclass
@@ -51,15 +66,52 @@ class SampleResult:
 
 
 class SamplerEngine:
-    """Continuous-batching frontend over the speculative rejection sampler."""
+    """Continuous-batching frontend over the NDPP samplers.
 
-    def __init__(self, sampler: NDPPSampler, n_slots: int = 8,
-                 n_spec: Optional[int] = None):
-        self.sampler = sampler
+    ``backend="rejection"`` speculatively batches Algorithm-2 proposals
+    across the pool; ``backend="mcmc"`` runs one Metropolis chain per slot
+    (``mcmc_k=None`` = variable-size up/down chain, an integer = fixed-size
+    swap chain) and retires a request with the chain state at step
+    ``mcmc_burn_in + mcmc_thin``.  The MCMC backend accepts either a
+    preprocessed ``NDPPSampler`` or a bare ``SpectralNDPP`` (no proposal
+    tree is needed).
+    """
+
+    def __init__(self, sampler: Union[NDPPSampler, SpectralNDPP],
+                 n_slots: int = 8, n_spec: Optional[int] = None,
+                 backend: str = "rejection", mcmc_burn_in: int = 256,
+                 mcmc_thin: int = 16, mcmc_steps_per_tick: Optional[int] = None,
+                 mcmc_k: Optional[int] = None, mcmc_p_swap: float = 0.25,
+                 mcmc_refresh_every: int = 64):
+        if backend not in ("rejection", "mcmc"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        if isinstance(sampler, NDPPSampler):
+            self.sampler: Optional[NDPPSampler] = sampler
+            self.sp = sampler.sp
+        else:
+            if backend == "rejection":
+                raise ValueError(
+                    "backend='rejection' needs a preprocessed NDPPSampler")
+            self.sampler = None
+            self.sp = sampler
         self.n_slots = n_slots
-        # default the speculation depth to ~E[#trials] so most requests
-        # retire after a single tick
-        self.n_spec = auto_n_spec(sampler) if n_spec is None else n_spec
+        if backend == "rejection":
+            # default the speculation depth to ~E[#trials] so most requests
+            # retire after a single tick
+            self.n_spec = auto_n_spec(sampler) if n_spec is None else n_spec
+        else:
+            self.mcmc_burn_in = mcmc_burn_in
+            self.mcmc_thin = mcmc_thin
+            self.mcmc_k = mcmc_k
+            self.mcmc_p_swap = mcmc_p_swap
+            self.mcmc_refresh_every = mcmc_refresh_every
+            self.mcmc_steps_per_tick = (
+                min(mcmc_refresh_every, mcmc_burn_in + mcmc_thin)
+                if mcmc_steps_per_tick is None else mcmc_steps_per_tick)
+            init = mcmc_core.init_empty(self.sp)
+            self._states = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape), init)
         self.queue: List[SampleRequest] = []
         self.slot_req: List[Optional[SampleRequest]] = [None] * n_slots
         self.slot_key = np.zeros((n_slots, 2), np.uint32)
@@ -71,6 +123,16 @@ class SamplerEngine:
     def submit(self, req: SampleRequest):
         self.queue.append(req)
 
+    def _init_chain_state(self, seed: int) -> mcmc_core.MCMCState:
+        """Deterministic per-request chain start (schedule-independent):
+        empty for the up/down chain, stochastic-greedy size-k for the swap
+        chain (keyed off the chain key, disjoint from the step schedule)."""
+        if self.mcmc_k is None:
+            return mcmc_core.init_empty(self.sp)
+        greedy_key = jax.random.fold_in(jax.random.PRNGKey(seed), 0x67726479)
+        st = mcmc_core.init_greedy(self.sp, greedy_key, 1, self.mcmc_k)
+        return jax.tree_util.tree_map(lambda a: a[0], st)
+
     def _admit(self):
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self.queue:
@@ -78,6 +140,10 @@ class SamplerEngine:
                 self.slot_req[slot] = req
                 self.slot_key[slot] = np.asarray(jax.random.PRNGKey(req.seed))
                 self.slot_trials[slot] = 0
+                if self.backend == "mcmc":
+                    st = self._init_chain_state(req.seed)
+                    self._states = jax.tree_util.tree_map(
+                        lambda a, v: a.at[slot].set(v), self._states, st)
 
     def _retire(self, slot: int, result: SampleResult):
         req = self.slot_req[slot]
@@ -87,8 +153,45 @@ class SamplerEngine:
 
     # ----------------------------------------------------------------- core
     def step(self) -> bool:
-        """One engine tick: admit from queue, run one speculative round for
-        the whole pool (one jitted call, fixed shapes), retire acceptances."""
+        """One engine tick: admit from queue, advance the whole pool with
+        one jitted fixed-shape call, retire finished slots."""
+        if self.backend == "mcmc":
+            return self._step_mcmc()
+        return self._step_rejection()
+
+    def _step_mcmc(self) -> bool:
+        """Advance every chain ``mcmc_steps_per_tick`` MH steps in one
+        vmapped call (vacant slots carry dummy chains so shapes never
+        change); a slot retires with the chain state at exactly step
+        ``burn_in + thin``, read out of the per-step trace."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return False
+        self.ticks += 1
+        n_steps = self.mcmc_steps_per_tick
+        states, items_tr, mask_tr, _ = mcmc_core.run_chains(
+            self.sp, jnp.asarray(self.slot_key), self._states,
+            n_steps=n_steps, fixed=self.mcmc_k is not None,
+            p_swap=self.mcmc_p_swap, refresh_every=self.mcmc_refresh_every)
+        self._states = states
+        items_h = np.asarray(items_tr)   # (S, n_steps, R)
+        mask_h = np.asarray(mask_tr)
+        target = self.mcmc_burn_in + self.mcmc_thin
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None:
+                continue
+            before = int(self.slot_trials[slot])
+            self.slot_trials[slot] = before + n_steps
+            if before + n_steps >= target:
+                idx = target - before - 1
+                self._retire(slot, SampleResult(
+                    items=items_h[slot, idx], mask=mask_h[slot, idx],
+                    trials=target, accepted=True,
+                ))
+        return True
+
+    def _step_rejection(self) -> bool:
+        """One speculative rejection round for the whole pool."""
         self._admit()
         if all(r is None for r in self.slot_req):
             return False

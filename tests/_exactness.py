@@ -1,0 +1,80 @@
+"""Shared exactness helpers for sampler tests.
+
+Every sampler in the repo (Cholesky, rejection — sequential and
+speculative — and the MCMC chains) is tested the same way: enumerate the
+target subset distribution Pr(Y) ∝ det(L_Y) on a tiny ground set, draw
+many samples, and compare histograms by chi-square and/or total-variation
+distance.  These helpers keep that machinery in one place.
+"""
+import itertools
+
+import numpy as np
+
+
+def enumerate_subset_probs(L, size=None):
+    """{subset tuple: probability} for Pr(Y) ∝ det(L_Y).
+
+    ``size=None`` enumerates all 2^M subsets (normalizer det(L + I));
+    an integer restricts to the size-k slice (k-NDPP target).
+    """
+    L = np.asarray(L, np.float64)
+    m = L.shape[0]
+    sizes = range(m + 1) if size is None else [size]
+    probs = {}
+    for r in sizes:
+        for y in itertools.combinations(range(m), r):
+            probs[y] = np.linalg.det(L[np.ix_(y, y)]) if y else 1.0
+    norm = np.linalg.det(L + np.eye(m)) if size is None else sum(probs.values())
+    return {y: p / norm for y, p in probs.items()}
+
+
+def histogram(items, mask):
+    """Count dict {sorted subset tuple: count} from padded (n, R) draws."""
+    items = np.asarray(items)
+    mask = np.asarray(mask)
+    emp = {}
+    for i in range(len(items)):
+        y = tuple(sorted(items[i][mask[i]]))
+        emp[y] = emp.get(y, 0) + 1
+    return emp
+
+
+def tv_hist(a, b, n):
+    """Total-variation distance between two count dicts over n draws."""
+    keys = set(a) | set(b)
+    return 0.5 * sum(abs(a.get(y, 0) - b.get(y, 0)) / n for y in keys)
+
+
+def tv_to_probs(emp, probs, n):
+    """TV distance between a count dict and an exact distribution (counts
+    outside ``probs``'s support — impossible subsets — count in full)."""
+    tv = 0.5 * sum(abs(emp.get(y, 0) / n - p) for y, p in probs.items())
+    extra = sum(c for y, c in emp.items() if y not in probs)
+    return tv + 0.5 * extra / n
+
+
+def chi_square(emp, probs, n, min_expected=5.0):
+    """(chi2, dof) against the exact distribution, pooling every bin with
+    expected count < ``min_expected`` into one rare bin."""
+    chi2, dof, rare_obs, rare_p = 0.0, 0, 0, 0.0
+    for y, p in probs.items():
+        exp = n * p
+        if exp >= min_expected:
+            chi2 += (emp.get(y, 0) - exp) ** 2 / exp
+            dof += 1
+        else:
+            rare_obs += emp.get(y, 0)
+            rare_p += p
+    if rare_p > 0:
+        exp = n * rare_p
+        chi2 += (rare_obs - exp) ** 2 / exp
+        dof += 1
+    return chi2, dof - 1
+
+
+def assert_chi_square_close(emp, probs, n, n_sigma=5.0):
+    """Assert the chi-square stat sits within ``n_sigma`` standard
+    deviations of its mean — loose enough for MC noise, tight enough to
+    catch a wrong sampler."""
+    chi2, dof = chi_square(emp, probs, n)
+    assert chi2 < dof + n_sigma * np.sqrt(2.0 * dof), (chi2, dof)

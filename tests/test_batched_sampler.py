@@ -7,13 +7,17 @@ histogram), and trial counts that match the Theorem-2 rate for an ONDPP
 kernel.  Also covers the slot-pool SamplerEngine: every retired request is
 returned, and a request's draw is independent of pool scheduling.
 """
-import itertools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _exactness import (
+    assert_chi_square_close,
+    enumerate_subset_probs,
+    histogram,
+    tv_hist,
+)
 from repro.core import (
     NDPPParams,
     NDPPSampler,
@@ -51,27 +55,7 @@ def sampler(params):
 
 @pytest.fixture(scope="module")
 def exact_probs(params):
-    l = np.asarray(dense_l(params), np.float64)
-    norm = np.linalg.det(l + np.eye(M))
-    probs = {}
-    for r in range(M + 1):
-        for y in itertools.combinations(range(M), r):
-            sub = l[np.ix_(list(y), list(y))]
-            probs[y] = (np.linalg.det(sub) if y else 1.0) / norm
-    return probs
-
-
-def _histogram(items, mask):
-    emp = {}
-    for i in range(len(items)):
-        y = tuple(sorted(items[i][mask[i]]))
-        emp[y] = emp.get(y, 0) + 1
-    return emp
-
-
-def _tv(a, b, n):
-    keys = set(a) | set(b)
-    return 0.5 * sum(abs(a.get(y, 0) - b.get(y, 0)) / n for y in keys)
+    return enumerate_subset_probs(dense_l(params))
 
 
 def test_batched_matches_sequential_histogram(sampler, exact_probs):
@@ -80,36 +64,20 @@ def test_batched_matches_sequential_histogram(sampler, exact_probs):
     bat = sample_batched_many(sampler, jax.random.PRNGKey(3), N_SAMPLES,
                               n_spec=4)
     assert bool(np.asarray(bat.accepted).all())
-    emp_b = _histogram(np.asarray(bat.items), np.asarray(bat.mask))
+    emp_b = histogram(bat.items, bat.mask)
     # no impossible subsets
     assert set(emp_b) <= set(exact_probs)
 
     # chi-square against the enumerated distribution over well-populated
     # bins (expected count >= 5, rare subsets pooled into one bin)
-    chi2, dof, rare_obs, rare_p = 0.0, 0, 0, 0.0
-    for y, p in exact_probs.items():
-        exp = N_SAMPLES * p
-        if exp >= 5.0:
-            chi2 += (emp_b.get(y, 0) - exp) ** 2 / exp
-            dof += 1
-        else:
-            rare_obs += emp_b.get(y, 0)
-            rare_p += p
-    if rare_p > 0:
-        exp = N_SAMPLES * rare_p
-        chi2 += (rare_obs - exp) ** 2 / exp
-        dof += 1
-    dof -= 1
-    # ~5 sigma above the chi-square mean: loose enough for MC, tight enough
-    # to catch a wrong sampler
-    assert chi2 < dof + 5.0 * np.sqrt(2.0 * dof), (chi2, dof)
+    assert_chi_square_close(emp_b, exact_probs, N_SAMPLES)
 
     # and the two empirical histograms agree with each other
     seq = jax.jit(lambda k: sample_batch(sampler, k, N_SAMPLES))(
         jax.random.PRNGKey(4)
     )
-    emp_s = _histogram(np.asarray(seq.items), np.asarray(seq.mask))
-    assert _tv(emp_b, emp_s, N_SAMPLES) < 0.08
+    emp_s = histogram(seq.items, seq.mask)
+    assert tv_hist(emp_b, emp_s, N_SAMPLES) < 0.08
 
 
 def test_batched_trials_match_expected_ondpp():

@@ -10,6 +10,7 @@ import pytest
 from repro.core import NDPPParams, preprocess
 from repro.core.kdpp import (
     elementary_symmetric,
+    elementary_symmetric_log,
     sample_fixed_size_e,
     sample_k_ndpp,
 )
@@ -36,6 +37,51 @@ def test_elementary_symmetric_matches_bruteforce(rng):
             np.prod(lam_np[list(c)]) for c in itertools.combinations(range(7), j)
         )
         assert float(esp[7, j]) == pytest.approx(brute, rel=1e-4)
+
+
+def test_elementary_symmetric_log_large_k_stable():
+    """Large-K numerical stability: e_j(λ) ~ C(N, j) overflows float32 for
+    N = 512, j = 64 (C(512, 64) ≈ 1e80), but the log-space table must stay
+    finite and agree with a float64 host recurrence to high relative
+    accuracy — it is what the size-k eigenvector selection walks."""
+    n, k = 512, 64
+    # local generator: keep the shared session rng's draw sequence intact
+    lam = jnp.asarray(np.random.default_rng(11).uniform(0.5, 2.0, n),
+                      jnp.float32)
+    log_esp = np.asarray(elementary_symmetric_log(lam, k), np.float64)
+    assert np.isfinite(log_esp[1:, : 2]).all()
+    assert log_esp[n, k] > 88.0  # the linear-space table would overflow f32
+
+    # float64 reference recurrence on host
+    lam64 = np.asarray(lam, np.float64)
+    # stabilized by factoring out the running max: compute in log space too,
+    # but with numpy's independent logaddexp implementation
+    ref = np.full(k + 1, -np.inf)
+    ref[0] = 0.0
+    rows = [ref.copy()]
+    for li in np.log(lam64):
+        shifted = np.concatenate([[-np.inf], ref[:-1]])
+        ref = np.logaddexp(ref, li + shifted)
+        rows.append(ref.copy())
+    ref_table = np.stack(rows)
+    np.testing.assert_allclose(log_esp, ref_table, rtol=1e-4, atol=1e-3)
+
+    # the linear-space f32 table does overflow there — the stability gap
+    # the log table closes
+    lin = np.asarray(elementary_symmetric(lam, k))
+    assert not np.isfinite(lin).all()
+
+
+def test_fixed_size_selection_large_k():
+    """Size-k selection stays exact (right sizes, no NaNs) on a spectrum
+    whose linear-space ESP table overflows float32."""
+    n, k = 512, 64
+    lam = jnp.asarray(np.random.default_rng(12).uniform(0.5, 2.0, n),
+                      jnp.float32)
+    masks = jax.jit(jax.vmap(lambda key: sample_fixed_size_e(lam, k, key)))(
+        jax.random.split(jax.random.PRNGKey(3), 64)
+    )
+    assert (np.asarray(masks).sum(1) == k).all()
 
 
 def test_fixed_size_selection_size_and_marginals(rng):

@@ -8,6 +8,8 @@ from repro.kernels.attention import ops as aops
 from repro.kernels.attention.ref import mha_ref
 from repro.kernels.bilinear import ops as bops
 from repro.kernels.bilinear.ref import bilinear_batched_ref, bilinear_ref
+from repro.kernels.mcmc_score import ops as mops
+from repro.kernels.mcmc_score.ref import score_all_ref
 from repro.kernels.ssd import ops as sops
 from repro.kernels.ssd.ref import ssd_ref
 from repro.kernels.tree_sum import ops as tops
@@ -35,6 +37,22 @@ def test_bilinear_batched(rng, n, b, r):
     ref = bilinear_batched_ref(z, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-4, atol=1e-4 * max(1, r))
+
+
+@pytest.mark.parametrize("m,c,r", [(64, 4, 16), (512, 2, 64), (100, 3, 40),
+                                   (33, 7, 130), (8, 1, 256)])
+def test_mcmc_score_all(m, c, r):
+    """Shared ground-set rows, one score matrix per chain — the MCMC
+    all-candidate move scorer."""
+    # local generator: later modules' draws from the shared session rng
+    # must not shift (their MC tolerances are kernel-dependent)
+    rng = np.random.default_rng(m * 1000 + c * 10 + r)
+    z = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(c, r, r)), jnp.float32)
+    out = mops.score_all(z, a, force_interpret=True)
+    ref = score_all_ref(z, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5 * max(1, r))
 
 
 @pytest.mark.parametrize("m,blk,r", [(64, 8, 16), (256, 64, 40), (128, 32, 130)])

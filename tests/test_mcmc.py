@@ -1,0 +1,231 @@
+"""MCMC sampling subsystem: ratio formulas, cache updates, stationarity.
+
+The chains target Pr(Y) ∝ det(L_Y) exactly (symmetric proposals, MH
+acceptance min(1, det ratio)), so on a tiny ground set the pooled chain
+histogram must match brute-force enumeration — same chi-square/TV
+machinery (tests/_exactness.py) the rejection sampler is held to.  The
+O(K^2) cached-ratio formulas and rank-1 inverse updates are checked
+against dense determinants, and the fused all-candidate Pallas scorer
+against its einsum reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _exactness import (
+    assert_chi_square_close,
+    enumerate_subset_probs,
+    histogram,
+    tv_to_probs,
+)
+from repro.core import (
+    NDPPParams,
+    add_ratio,
+    d_from_sigma,
+    init_empty,
+    init_greedy,
+    preprocess,
+    remove_ratio,
+    sample_batched_many,
+    sample_mcmc,
+    score_matrix,
+    spectral_from_params,
+    swap_ratio,
+    swap_score_matrix,
+)
+from repro.core import mcmc as mcmc_mod
+from repro.core.types import dense_l_spectral
+from repro.serve.sampler_engine import SampleRequest, SamplerEngine
+
+M, K = 8, 4
+N_SAMPLES = 6000
+
+
+@pytest.fixture(scope="module")
+def params():
+    # module-local generator: test_mcmc must see the same kernel regardless
+    # of which other test modules consumed the shared session rng first
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32)
+    d = jnp.asarray(rng.normal(size=(K, K)), jnp.float32)
+    return NDPPParams(v, b, d)
+
+
+@pytest.fixture(scope="module")
+def sp(params):
+    return spectral_from_params(params.V, params.B, params.D)
+
+
+@pytest.fixture(scope="module")
+def exact_probs(sp):
+    # enumerate against the *spectral* kernel the chains actually score
+    return enumerate_subset_probs(dense_l_spectral(sp))
+
+
+def _state_for(sp, subset):
+    r = sp.Z.shape[1]
+    items = -np.ones(r, np.int32)
+    mask = np.zeros(r, bool)
+    for s, it in enumerate(subset):
+        items[s], mask[s] = it, True
+    st = mcmc_mod.MCMCState(jnp.asarray(items), jnp.asarray(mask),
+                            jnp.eye(r, dtype=jnp.float32),
+                            jnp.asarray(0, jnp.int32))
+    return mcmc_mod.refresh(sp, st)
+
+
+def _det(L, y):
+    y = sorted(y)
+    return np.linalg.det(L[np.ix_(y, y)]) if y else 1.0
+
+
+def test_ratios_match_dense_determinants(sp):
+    """add / remove / swap ratios from the cached inverse equal brute-force
+    determinant ratios."""
+    L = np.asarray(dense_l_spectral(sp), np.float64)
+    y = [1, 3, 6]
+    st = _state_for(sp, y)
+    assert float(add_ratio(sp, st, jnp.asarray(0))) == pytest.approx(
+        _det(L, y + [0]) / _det(L, y), rel=1e-4)
+    assert float(remove_ratio(st, jnp.asarray(1))) == pytest.approx(
+        _det(L, [1, 6]) / _det(L, y), rel=1e-4)
+    assert float(swap_ratio(sp, st, jnp.asarray(2), jnp.asarray(5))
+                 ) == pytest.approx(_det(L, [1, 3, 5]) / _det(L, y), rel=1e-4)
+
+
+def test_score_matrices_match_dense(sp):
+    """The per-chain bilinear score matrices reproduce every candidate's
+    add / swap determinant ratio at once."""
+    L = np.asarray(dense_l_spectral(sp), np.float64)
+    y = [1, 3, 6]
+    st = _state_for(sp, y)
+    a = score_matrix(sp, st)
+    adds = np.asarray(jnp.einsum("mi,ij,mj->m", sp.Z, a, sp.Z))
+    a_sw = swap_score_matrix(sp, st, jnp.asarray(0))  # slot 0 holds item 1
+    swaps = np.asarray(jnp.einsum("mi,ij,mj->m", sp.Z, a_sw, sp.Z))
+    base = _det(L, y)
+    for j in range(M):
+        if j in y:
+            continue
+        assert adds[j] == pytest.approx(_det(L, y + [j]) / base, rel=1e-3)
+        assert swaps[j] == pytest.approx(_det(L, [3, 6, j]) / base, rel=1e-3)
+
+
+def test_cache_updates_track_fresh_inverse(sp):
+    """A long random add/remove/swap walk keeps the rank-1-updated inverse
+    within float32 drift of a from-scratch inverse."""
+    st = init_empty(sp)
+    x = sp.x_matrix()
+    key = jax.random.PRNGKey(0)
+    for t in range(200):
+        st, _ = mcmc_mod._mh_step(sp.Z, x, st, jax.random.fold_in(key, t),
+                                  fixed=False, p_swap=0.3)
+    fresh = mcmc_mod.refresh(sp, st)
+    assert float(jnp.abs(st.minv - fresh.minv).max()) < 1e-3
+    # state stayed consistent: padded det is positive
+    ly = mcmc_mod._padded_l(sp.Z, x, st.items, st.mask)
+    sign, _ = jnp.linalg.slogdet(ly)
+    assert float(sign) > 0
+
+
+def test_mcmc_updown_stationarity(sp, exact_probs):
+    """Variable-size up/down/swap chain: pooled histogram matches the
+    enumerated NDPP distribution (chi-square + TV)."""
+    res = sample_mcmc(sp, jax.random.PRNGKey(0), N_SAMPLES, n_chains=128,
+                      burn_in=384, thin=8)
+    assert 0.05 < float(res.accept_rate) < 0.95
+    emp = histogram(res.items, res.mask)
+    assert set(emp) <= set(exact_probs)   # no impossible subsets
+    assert tv_to_probs(emp, exact_probs, N_SAMPLES) < 0.06
+    assert_chi_square_close(emp, exact_probs, N_SAMPLES, n_sigma=6.0)
+
+
+def test_mcmc_swap_stationarity_kndpp(sp):
+    """Fixed-size swap chain: pooled histogram matches the enumerated
+    k-NDPP (size-k slice) distribution, and every draw has exactly k
+    items."""
+    kk = 3
+    probs = enumerate_subset_probs(dense_l_spectral(sp), size=kk)
+    res = sample_mcmc(sp, jax.random.PRNGKey(1), N_SAMPLES, k=kk,
+                      n_chains=128, burn_in=384, thin=8)
+    assert (np.asarray(res.mask).sum(1) == kk).all()
+    emp = histogram(res.items, res.mask)
+    assert set(emp) <= set(probs)
+    assert tv_to_probs(emp, probs, N_SAMPLES) < 0.06
+    assert_chi_square_close(emp, probs, N_SAMPLES, n_sigma=6.0)
+
+
+def test_greedy_init_sizes_and_positivity(sp):
+    """Greedy initializer returns size-k states with positive determinant
+    and a consistent cached inverse."""
+    states = init_greedy(sp, jax.random.PRNGKey(2), 16, 3)
+    assert (np.asarray(states.mask).sum(1) == 3).all()
+    x = sp.x_matrix()
+    for c in range(16):
+        st = jax.tree_util.tree_map(lambda a: a[c], states)
+        ly = mcmc_mod._padded_l(sp.Z, x, st.items, st.mask)
+        sign, _ = jnp.linalg.slogdet(ly)
+        assert float(sign) > 0
+        np.testing.assert_allclose(np.asarray(st.minv @ ly),
+                                   np.eye(sp.Z.shape[1]), atol=1e-3)
+
+
+def test_engine_mcmc_backend_returns_all(sp):
+    """backend='mcmc': every request retires with a valid draw, and the
+    draw is independent of tick size and pool size (slot = chain keyed by
+    fold_in(chain_key, step))."""
+    eng = SamplerEngine(sp, n_slots=3, backend="mcmc", mcmc_burn_in=64,
+                        mcmc_thin=8, mcmc_steps_per_tick=32)
+    n_req = 7
+    for i in range(n_req):
+        eng.submit(SampleRequest(rid=i, seed=100 + i))
+    out = eng.run()
+    assert sorted(out) == list(range(n_req))
+    assert all(out[i].accepted and out[i].trials == 72 for i in out)
+
+    # a different tick size (both dividing refresh_every, so the absolute
+    # refresh schedule — and hence every float — is identical)
+    eng2 = SamplerEngine(sp, n_slots=2, backend="mcmc", mcmc_burn_in=64,
+                         mcmc_thin=8, mcmc_steps_per_tick=16)
+    for i in range(n_req):
+        eng2.submit(SampleRequest(rid=i, seed=100 + i))
+    out2 = eng2.run()
+    for i in range(n_req):
+        assert np.array_equal(out[i].items, out2[i].items), i
+        assert np.array_equal(out[i].mask, out2[i].mask), i
+
+
+def test_engine_mcmc_succeeds_where_rejection_exhausts():
+    """Acceptance scenario: an unconstrained (non-ONDPP) kernel with a huge
+    rejection rate.  The rejection backend burns its whole max_trials
+    budget without accepting; the MCMC backend returns valid samples whose
+    per-step cost never saw the rejection rate."""
+    rng = np.random.default_rng(0)
+    m, k = 64, 24
+    v = jnp.asarray(rng.normal(size=(m, k)) * 0.05, jnp.float32)
+    b = jnp.asarray(np.linalg.qr(rng.normal(size=(m, k)))[0], jnp.float32)
+    d = d_from_sigma(jnp.ones((k // 2,), jnp.float32))
+    sampler = preprocess(v, b, d, block=8)
+
+    from repro.core import det_ratio_exact
+    assert float(det_ratio_exact(sampler.sp)) > 1e3  # genuinely adversarial
+
+    rej = sample_batched_many(sampler, jax.random.PRNGKey(0), 8, n_spec=8,
+                              max_trials=64)
+    assert not bool(np.asarray(rej.accepted).any())  # budget exhausted
+
+    eng = SamplerEngine(sampler, n_slots=4, backend="mcmc",
+                        mcmc_burn_in=128, mcmc_thin=16)
+    for i in range(8):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    out = eng.run()
+    assert sorted(out) == list(range(8))
+    L = np.asarray(dense_l_spectral(sampler.sp), np.float64)
+    for i in range(8):
+        assert out[i].accepted
+        y = sorted(out[i].items[out[i].mask].tolist())
+        assert len(y) == len(set(y)) and all(0 <= j < m for j in y)
+        if y:  # the chain only ever occupies positive-determinant states
+            assert np.linalg.det(L[np.ix_(y, y)]) > 0
