@@ -13,10 +13,19 @@ Fig. 2(a)/(b).
 up/down chains, per-step cost O(K^2) independent of the rejection rate)
 against Cholesky and rejection per-sample latency.
 
+``--mode sharded`` sweeps device counts on a (possibly simulated) mesh:
+the item-sharded rejection round and MCMC tick are timed per device
+count, together with the per-device bytes of the sharded proposal tree —
+the scaling table for the mesh backends.  On a CPU host pass
+``--devices N`` (sets ``--xla_force_host_platform_device_count`` before
+jax initializes) to simulate an N-device mesh.
+
 Every run emits a machine-readable ``BENCH_sampling.json`` (``--out``):
 ``{"meta": {...}, "modes": {mode: [row, ...]}}`` with wall ms, samples/s,
 and trials/steps per row, so the repo's perf trajectory is diffable
-across PRs.
+across PRs.  ``--smoke`` shrinks every sweep to seconds (used by the doc
+snippet CI; pair it with ``--out ""`` to leave the committed numbers
+alone).
 """
 from __future__ import annotations
 
@@ -54,8 +63,9 @@ def _time(fn, reps=3):
 
 
 def run(ms: List[int] = None, k: int = 32, n_samples: int = 8,
-        out_rows: List[Dict] = None):
-    ms = ms or [2 ** e for e in range(8, 15)]
+        out_rows: List[Dict] = None, smoke: bool = False):
+    ms = ms or ([2 ** 8, 2 ** 10] if smoke else
+                [2 ** e for e in range(8, 15)])
     rows = []
     for m in ms:
         v, b, d = synthetic_features(m, k // 2, seed=0)
@@ -104,7 +114,8 @@ def run(ms: List[int] = None, k: int = 32, n_samples: int = 8,
 
 
 def run_batched(ms: List[int] = None, k: int = 32, n_requests: int = 64,
-                n_spec: int = None, out_rows: List[Dict] = None):
+                n_spec: int = None, out_rows: List[Dict] = None,
+                smoke: bool = False):
     """Batched-vs-sequential rejection sampling throughput.
 
     Sequential = the pre-batching serving path: one jitted per-request
@@ -113,6 +124,9 @@ def run_batched(ms: List[int] = None, k: int = 32, n_requests: int = 64,
     share one batched tree traversal + one batched log-det ratio per
     speculative round.  Reports samples/s and the speedup.
     """
+    if smoke:
+        ms = ms or [2 ** 10]
+        n_requests = min(n_requests, 8)
     ms = ms or [2 ** 12, 2 ** 14]
     rows = []
     for m in ms:
@@ -165,11 +179,14 @@ def run_batched(ms: List[int] = None, k: int = 32, n_requests: int = 64,
 
 
 def run_mcmc(ms: List[int] = None, k: int = 32, n_samples: int = 64,
-             burn_in: int = 256, thin: int = 16):
+             burn_in: int = 256, thin: int = 16, smoke: bool = False):
     """Per-sample latency of all three backends: Cholesky (O(MK^2) exact),
     rejection (sublinear, rate-dependent), MCMC (rate-independent,
     O(K^2)/step — ``burn_in + thin`` steps buy the first sample of a chain,
     ``thin`` steps every further one)."""
+    if smoke:
+        ms = ms or [2 ** 10]
+        n_samples, burn_in, thin = 16, 64, 8
     ms = ms or [2 ** 10, 2 ** 12]
     rows = []
     for m in ms:
@@ -217,16 +234,104 @@ def run_mcmc(ms: List[int] = None, k: int = 32, n_samples: int = 64,
     return rows
 
 
+def run_sharded(ms: List[int] = None, k: int = 32, n_requests: int = 64,
+                n_spec: int = None, device_counts: List[int] = None,
+                smoke: bool = False):
+    """Device-count scaling of the item-sharded backends.
+
+    For each catalog size M and each device count S, times (a) one
+    speculative rejection drain of ``n_requests`` through
+    ``sample_batched_many(mesh=...)`` and (b) a fixed budget of MCMC steps
+    through ``run_chains_sharded``, against the matching single-device
+    calls, and records the per-device bytes of the sharded tree.  On a
+    simulated CPU mesh the devices share one socket, so wall-clock mostly
+    measures collective overhead — the tracked scaling signal there is
+    per-device memory; on real accelerators the same rows show compute
+    scaling.
+    """
+    from jax.sharding import Mesh
+
+    from repro.core.mcmc import init_empty, run_chains, run_chains_sharded
+    from repro.core.rejection import NDPPSampler, shard_sampler
+
+    if smoke:
+        ms = ms or [2 ** 10]
+        n_requests = min(n_requests, 8)
+    ms = ms or [2 ** 12, 2 ** 14]
+    devs = jax.devices()
+    if len(devs) == 1:
+        print("warning: only 1 device visible — sharded rows will all be "
+              "S=1 (set --devices N / XLA_FLAGS before jax initializes)")
+    device_counts = device_counts or sorted(
+        {s for s in (1, 2, 4, 8, len(devs)) if s <= len(devs)})
+    n_chains, n_steps = 8, 64
+    rows = []
+    for m in ms:
+        v, b, d = synthetic_features(m, k // 2, seed=0)
+        scale = 1.0 / np.sqrt(m)
+        v, b = v * scale, b * scale
+        sampler = preprocess(v, b, d, block=64)
+        spec = n_spec if n_spec is not None else auto_n_spec(sampler)
+        states = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_chains,) + a.shape),
+            init_empty(sampler.sp))
+        chain_keys = jax.random.split(jax.random.PRNGKey(2), n_chains)
+        for s in device_counts:
+            mesh = Mesh(np.asarray(devs[:s]), ("model",))
+            sh = shard_sampler(sampler, mesh)
+
+            def rej():
+                res = sample_batched_many(
+                    sh, jax.random.PRNGKey(1), n_requests, n_spec=spec,
+                    mesh=mesh)
+                jax.block_until_ready(res.items)
+
+            def mc():
+                out = run_chains_sharded(
+                    sh.sp, chain_keys, states, mesh=mesh, n_steps=n_steps)
+                jax.block_until_ready(out[1])
+
+            t_rej = _time(rej, reps=1 if smoke else 3)
+            t_mc = _time(mc, reps=1 if smoke else 3)
+            shard0 = lambda a: a.addressable_shards[0].data.nbytes  # noqa: E731
+            tree_local = sum(shard0(lv) for lv in sh.tree.levels) \
+                + shard0(sh.tree.W)
+            row = dict(M=m, K=k, n_devices=s, n_requests=n_requests,
+                       n_spec=spec, rejection_s=t_rej,
+                       rejection_sps=n_requests / t_rej,
+                       mcmc_s=t_mc,
+                       mcmc_steps_ps=n_chains * n_steps / t_mc,
+                       tree_local_mb=tree_local / 2 ** 20,
+                       z_local_mb=shard0(sh.sp.Z) / 2 ** 20)
+            rows.append(row)
+            print(
+                f"M=2^{int(np.log2(m)):2d} S={s} "
+                f"rej={t_rej*1e3:8.1f}ms ({row['rejection_sps']:7.1f}/s) "
+                f"mcmc={t_mc*1e3:8.1f}ms "
+                f"({row['mcmc_steps_ps']:8.0f} steps/s) "
+                f"tree/dev={row['tree_local_mb']:7.2f}MB "
+                f"Z/dev={row['z_local_mb']:6.2f}MB"
+            )
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
+    import os
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
-                    choices=["latency", "batched", "mcmc", "both", "all"],
+                    choices=["latency", "batched", "mcmc", "sharded",
+                             "both", "all"],
                     default="both")
     ap.add_argument("--n-requests", type=int, default=64)
     ap.add_argument("--n-spec", type=int, default=None,
                     help="speculation depth (default: auto ~ E[#trials])")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="simulated CPU device count for --mode sharded "
+                         "(must be set before jax initializes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale sweeps (doc snippets / CI)")
     ap.add_argument("--out", default="BENCH_sampling.json",
                     help="machine-readable results path ('' disables)")
     args = ap.parse_args()
@@ -234,17 +339,34 @@ if __name__ == "__main__":
         "latency": ("latency",),
         "batched": ("batched",),
         "mcmc": ("mcmc",),
+        "sharded": ("sharded",),
         "both": ("latency", "batched"),
-        "all": ("latency", "batched", "mcmc"),
+        "all": ("latency", "batched", "mcmc", "sharded"),
     }[args.mode]
+    if "sharded" in modes and args.devices > 1:
+        # must land before the first jax backend touch in this process;
+        # argparse runs before any jax call, so this is safe here.  Append
+        # to (not replace) any user-set XLA_FLAGS; an already-forced device
+        # count wins.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} "
+                f"--xla_force_host_platform_device_count={args.devices}"
+            ).strip()
     results: Dict[str, List[Dict]] = {}
     if "latency" in modes:
-        results["latency"] = run()
+        results["latency"] = run(smoke=args.smoke)
     if "batched" in modes:
         results["batched"] = run_batched(n_requests=args.n_requests,
-                                         n_spec=args.n_spec)
+                                         n_spec=args.n_spec,
+                                         smoke=args.smoke)
     if "mcmc" in modes:
-        results["mcmc"] = run_mcmc()
+        results["mcmc"] = run_mcmc(smoke=args.smoke)
+    if "sharded" in modes:
+        results["sharded"] = run_sharded(n_requests=args.n_requests,
+                                         n_spec=args.n_spec,
+                                         smoke=args.smoke)
     if args.out:
         # merge into any existing file so a partial-mode run never drops
         # another mode's tracked rows (e.g. `--mode batched` keeps the

@@ -36,9 +36,14 @@ from .tree import (  # noqa: F401
     proposal_eigens,
     sample_proposal_dpp,
     sample_proposal_dpp_batch,
+    sample_proposal_dpp_batch_sharded,
     sample_elementary,
     sample_elementary_batch,
+    sample_elementary_batch_sharded,
     sample_elementary_dense,
+    shard_spectral,
+    shard_tree,
+    tree_shard_specs,
 )
 from .rejection import (  # noqa: F401
     NDPPSampler,
@@ -48,6 +53,7 @@ from .rejection import (  # noqa: F401
     sample_batch,
     sample_batched,
     sample_batched_many,
+    shard_sampler,
     auto_n_spec,
     expected_trials,
     det_ratio_exact,
@@ -85,6 +91,7 @@ from .mcmc import (  # noqa: F401
     init_greedy,
     remove_ratio,
     run_chains,
+    run_chains_sharded,
     sample_mcmc,
     score_matrix,
     swap_ratio,

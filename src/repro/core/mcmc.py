@@ -48,6 +48,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .types import SpectralNDPP
 
@@ -79,13 +81,19 @@ class MCMCSample(NamedTuple):
 # ---------------------------------------------------------------- state core
 
 
-def _masked_rows(Z: jax.Array, items: jax.Array, mask: jax.Array) -> jax.Array:
-    return Z[jnp.maximum(items, 0)] * mask[:, None].astype(Z.dtype)
+def _masked_rows(Z: jax.Array, items: jax.Array, mask: jax.Array,
+                 axis_name: Optional[str] = None) -> jax.Array:
+    """Subset rows ``Z[items] * mask``; with ``axis_name`` (inside a
+    shard_map over row-sharded Z) each row is fetched from its owner shard
+    by masked psum — bit-identical to the plain gather."""
+    from repro.models import sharding as msh
+
+    return msh.gather_rows(Z, items, mask, axis_name)
 
 
 def _padded_l(Z: jax.Array, x: jax.Array, items: jax.Array,
-              mask: jax.Array) -> jax.Array:
-    zy = _masked_rows(Z, items, mask)
+              mask: jax.Array, axis_name: Optional[str] = None) -> jax.Array:
+    zy = _masked_rows(Z, items, mask, axis_name)
     return zy @ x @ zy.T + jnp.diag((~mask).astype(Z.dtype))
 
 
@@ -96,7 +104,13 @@ def refresh(sp: SpectralNDPP, state: MCMCState) -> MCMCState:
 
 
 def init_empty(sp: SpectralNDPP) -> MCMCState:
-    """Start at Y = ∅ (det = 1, inverse = identity)."""
+    """Start at Y = ∅ (det = 1, inverse = identity).
+
+    Returns an ``MCMCState`` with R = 2K padded slots: items (R,) all -1,
+    mask (R,) all False, minv = I_R, step = 0.  The up/down chain's
+    canonical start; broadcast it over a leading chain axis for
+    ``run_chains``.
+    """
     r = sp.Z.shape[1]
     return MCMCState(
         items=-jnp.ones((r,), jnp.int32),
@@ -106,11 +120,14 @@ def init_empty(sp: SpectralNDPP) -> MCMCState:
     )
 
 
-def _uvt(Z: jax.Array, x: jax.Array, state: MCMCState,
-         j: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def _uvt(Z: jax.Array, x: jax.Array, state: MCMCState, j: jax.Array,
+         axis_name: Optional[str] = None
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """u = Z_Y X z_j, v = Z_Y X^T z_j (so v_r = L[j, r]), t = L[j, j]."""
-    zy = _masked_rows(Z, state.items, state.mask)
-    zj = Z[j]
+    from repro.models import sharding as msh
+
+    zy = _masked_rows(Z, state.items, state.mask, axis_name)
+    zj = msh.gather_row(Z, j, axis_name)
     u = zy @ (x @ zj)
     v = zy @ (x.T @ zj)
     t = zj @ (x @ zj)
@@ -193,9 +210,10 @@ def _cond_remove(state: MCMCState, slot: jax.Array,
 
 
 def _cond_add(Z: jax.Array, x: jax.Array, state: MCMCState, j: jax.Array,
-              slot: jax.Array, pred: jax.Array) -> MCMCState:
+              slot: jax.Array, pred: jax.Array,
+              axis_name: Optional[str] = None) -> MCMCState:
     """Add item j at padding slot ``slot`` iff pred: block-inverse update."""
-    u, v, t = _uvt(Z, x, state, j)
+    u, v, t = _uvt(Z, x, state, j, axis_name)
     minv = state.minv
     pu = minv @ u
     vp = v @ minv
@@ -220,12 +238,16 @@ def _cond_add(Z: jax.Array, x: jax.Array, state: MCMCState, j: jax.Array,
 
 
 def _mh_step(Z: jax.Array, x: jax.Array, state: MCMCState, key: jax.Array,
-             *, fixed: bool, p_swap: float) -> Tuple[MCMCState, jax.Array]:
+             *, fixed: bool, p_swap: float,
+             axis_name: Optional[str] = None,
+             m_total: Optional[int] = None) -> Tuple[MCMCState, jax.Array]:
     """One Metropolis step.  ``fixed=True`` = k-NDPP swap chain (size is an
     invariant); otherwise the up/down chain with a ``p_swap`` swap mixture.
     Returns (new state, accepted?).  All proposals are symmetric, so the
-    acceptance probability is min(1, det ratio)."""
-    m = Z.shape[0]
+    acceptance probability is min(1, det ratio).  ``axis_name``/``m_total``
+    run the step inside a shard_map over row-sharded Z (``m_total`` = global
+    catalog size; Z is then the local row block)."""
+    m = Z.shape[0] if m_total is None else m_total
     r = state.items.shape[0]
     k_move, k_cand, k_slot, k_acc = jax.random.split(key, 4)
 
@@ -242,7 +264,7 @@ def _mh_step(Z: jax.Array, x: jax.Array, state: MCMCState, key: jax.Array,
         k_slot, jnp.where(mask, 0.0, -jnp.inf))
     occ_slot = jnp.where(size > 0, occ_slot, 0)
 
-    u, v, t = _uvt(Z, x, state, cand)
+    u, v, t = _uvt(Z, x, state, cand, axis_name)
     pu = minv @ u
     vp = v @ minv
     r_add = t - v @ pu
@@ -275,12 +297,14 @@ def _mh_step(Z: jax.Array, x: jax.Array, state: MCMCState, key: jax.Array,
     add_slot = jnp.where(move_add, free_slot, occ_slot)
     state = _cond_remove(state, rem_slot, accept & (move_rem | move_swap))
     state = _cond_add(Z, x, state, cand, add_slot,
-                      accept & (move_add | move_swap))
+                      accept & (move_add | move_swap), axis_name)
     return state._replace(step=state.step + 1), accept
 
 
 def _chain_trace(Z, x, chain_key, state, *, n_steps: int, fixed: bool,
-                 p_swap: float, refresh_every: int):
+                 p_swap: float, refresh_every: int,
+                 axis_name: Optional[str] = None,
+                 m_total: Optional[int] = None):
     """Advance one chain ``n_steps`` steps, recording (items, mask, accept)
     at every step.  The cached inverse is recomputed exactly on the
     *absolute-step* schedule ``state.step % refresh_every == 0``, checked at
@@ -291,14 +315,15 @@ def _chain_trace(Z, x, chain_key, state, *, n_steps: int, fixed: bool,
     exact either way; only float drift depends on it."""
 
     def refresh_(st):
-        ly = _padded_l(Z, x, st.items, st.mask)
+        ly = _padded_l(Z, x, st.items, st.mask, axis_name)
         hit = st.step % refresh_every == 0
         return st._replace(
             minv=jnp.where(hit, jnp.linalg.inv(ly), st.minv))
 
     def body(st, step_idx):
         key = jax.random.fold_in(chain_key, step_idx)
-        st, acc = _mh_step(Z, x, st, key, fixed=fixed, p_swap=p_swap)
+        st, acc = _mh_step(Z, x, st, key, fixed=fixed, p_swap=p_swap,
+                           axis_name=axis_name, m_total=m_total)
         return st, (st.items, st.mask, acc)
 
     traces = []
@@ -337,6 +362,47 @@ def run_chains(sp: SpectralNDPP, chain_keys: jax.Array, states: MCMCState,
     )(chain_keys, states)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_steps", "fixed", "p_swap", "refresh_every", "mesh"))
+def run_chains_sharded(sp: SpectralNDPP, chain_keys: jax.Array,
+                       states: MCMCState, *, mesh: Mesh, n_steps: int,
+                       fixed: bool = False, p_swap: float = 0.25,
+                       refresh_every: int = 64):
+    """``run_chains`` with the (M, 2K) catalog rows sharded over the mesh
+    "model" axis.
+
+    Chain state (padded subset + cached (2K, 2K) inverse) is replicated;
+    only the candidate row z_j and the <= 2K subset rows Z_Y cross shards,
+    each fetched from its owner by a masked psum of exact zeros — so
+    trajectories are bit-identical to the single-device ``run_chains`` while
+    per-device catalog memory drops to M/S rows.  Requires M divisible by
+    the mesh "model" extent.
+    """
+    from repro.models import sharding as msh
+
+    s = msh.model_extent(mesh)
+    m_total = sp.Z.shape[0]
+    if m_total % s != 0:
+        raise ValueError(
+            f"the mesh 'model' extent {s} must divide the catalog size "
+            f"M={m_total}; pad the catalog or use a smaller mesh")
+    sp_specs = SpectralNDPP(Z=P("model", None), sigma=P(None))
+
+    def inner(sp_loc, ck, st):
+        x = sp_loc.x_matrix()
+        return jax.vmap(
+            lambda k, s_: _chain_trace(
+                sp_loc.Z, x, k, s_, n_steps=n_steps, fixed=fixed,
+                p_swap=p_swap, refresh_every=refresh_every,
+                axis_name="model", m_total=m_total)
+        )(ck, st)
+
+    f = shard_map(inner, mesh=mesh, in_specs=(sp_specs, P(None), P(None)),
+                  out_specs=P(None), check_rep=False)
+    return f(sp, chain_keys, states)
+
+
 # --------------------------------------------------------------- greedy init
 
 
@@ -371,7 +437,11 @@ def _greedy_round(sp: SpectralNDPP, states: MCMCState, chain_keys: jax.Array,
 
 def init_greedy(sp: SpectralNDPP, key: jax.Array, n_chains: int, k: int,
                 *, force_interpret: bool = False) -> MCMCState:
-    """Stochastic-greedy size-k initial states for C chains.
+    """Stochastic-greedy size-k initial states for C = ``n_chains`` chains.
+
+    Returns an ``MCMCState`` with leading dim C (items/mask (C, R), minv
+    (C, R, R), step (C,)), each chain holding a distinct size-k subset with
+    det(L_Y) > 0 and a freshly inverted cache.
 
     Each of the k rounds scores EVERY candidate item for EVERY chain in one
     fused all-candidate pass (``kernels.mcmc_score.score_all`` — C batched
@@ -404,6 +474,7 @@ def sample_mcmc(
     thin: int = 8,
     p_swap: float = 0.25,
     refresh_every: int = 64,
+    mesh: Optional[Mesh] = None,
 ) -> MCMCSample:
     """Draw ``n_samples`` subsets by MCMC (exact target Pr(Y) ∝ det(L_Y)).
 
@@ -411,7 +482,9 @@ def sample_mcmc(
     ``k`` runs the fixed-size swap chain from stochastic-greedy size-k
     starts.  ``n_chains`` chains run in one vmap; each contributes
     ``ceil(n_samples / n_chains)`` states taken every ``thin`` steps after
-    ``burn_in``.
+    ``burn_in``.  ``mesh``: keep the catalog rows device-local across the
+    mesh "model" axis (``run_chains_sharded``; draws are bit-identical to
+    the single-device chains).
     """
     n_chains = min(n_chains, n_samples)
     per_chain = -(-n_samples // n_chains)
@@ -422,9 +495,14 @@ def sample_mcmc(
     else:
         states = init_greedy(sp, jax.random.fold_in(key, 0x6d636d63),
                              n_chains, k)
-    _, items_tr, mask_tr, acc_tr = run_chains(
-        sp, chain_keys, states, n_steps=n_steps, fixed=k is not None,
-        p_swap=p_swap, refresh_every=refresh_every)
+    if mesh is None:
+        _, items_tr, mask_tr, acc_tr = run_chains(
+            sp, chain_keys, states, n_steps=n_steps, fixed=k is not None,
+            p_swap=p_swap, refresh_every=refresh_every)
+    else:
+        _, items_tr, mask_tr, acc_tr = run_chains_sharded(
+            sp, chain_keys, states, mesh=mesh, n_steps=n_steps,
+            fixed=k is not None, p_swap=p_swap, refresh_every=refresh_every)
     take = burn_in + thin * np.arange(1, per_chain + 1) - 1  # (per_chain,)
     items = items_tr[:, take].reshape(-1, items_tr.shape[-1])[:n_samples]
     mask = mask_tr[:, take].reshape(-1, mask_tr.shape[-1])[:n_samples]

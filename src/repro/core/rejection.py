@@ -12,11 +12,14 @@ of M.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .types import SpectralNDPP
 from .tree import (
@@ -25,6 +28,9 @@ from .tree import (
     proposal_eigens,
     sample_proposal_dpp,
     sample_proposal_dpp_batch,
+    shard_spectral,
+    shard_tree,
+    tree_shard_specs,
 )
 
 
@@ -85,7 +91,15 @@ def log_det_ratio(
     (k_pad x k_pad) with unit diagonal on padding rows so the padding
     contributes a factor of exactly 1.
     """
-    zy = _masked_rows(sp.Z, items, mask)
+    return _log_det_ratio_rows(sp, _masked_rows(sp.Z, items, mask), mask)
+
+
+def _log_det_ratio_rows(
+    sp: SpectralNDPP, zy: jax.Array, mask: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """``log_det_ratio`` from pre-gathered (k_pad, 2K) subset rows ``zy``
+    (padding rows already zeroed) — the sharded round gathers rows across
+    shards first and shares this 2K-space math."""
     x = sp.x_matrix()
     pad_eye = jnp.diag((~mask).astype(zy.dtype))
     l_y = zy @ x @ zy.T + pad_eye
@@ -194,6 +208,52 @@ def _spec_round(sampler: NDPPSampler, keys: jax.Array):
     return items, mask, accept
 
 
+def shard_sampler(sampler: NDPPSampler, mesh: Mesh) -> NDPPSampler:
+    """Place a preprocessed sampler on a device mesh: tree deep levels, W,
+    and the Z rows are item-sharded over the mesh "model" axis (shallow
+    levels, lam, sigma replicated).  The sharded sampler draws bit-identical
+    samples through ``_spec_round_sharded`` / ``sample_batched_many(mesh=)``.
+    """
+    return NDPPSampler(sp=shard_spectral(sampler.sp, mesh),
+                       tree=shard_tree(sampler.tree, mesh))
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _spec_round_sharded(sampler: NDPPSampler, keys: jax.Array, mesh: Mesh):
+    """``_spec_round`` over a device mesh: one shard_map in which the tree
+    descent, leaf scoring, and the Z-row gathers for the log-det ratio all
+    happen on the shard owning the items, combined by psums of exact zeros.
+    Only the (N, R)-shaped proposal subsets and (N,) scores cross shards —
+    never an (M, ...)-shaped array.  Bit-identical to ``_spec_round``."""
+    from repro.models import sharding as msh
+
+    s = msh.model_extent(mesh)
+    z_spec = msh.logical_to_spec(mesh, ("items", None), sampler.sp.Z.shape)
+    z_axis = "model" if (s > 1 and z_spec != P(None, None)
+                         and z_spec[0] is not None) else None
+    in_specs = (
+        NDPPSampler(sp=SpectralNDPP(Z=z_spec, sigma=P(None)),
+                    tree=tree_shard_specs(sampler.tree, mesh)),
+        P(None),
+    )
+    m_pad = sampler.tree.W.shape[0]
+
+    def inner(s_loc, keys):
+        ks = jax.vmap(jax.random.split)(keys)
+        items, mask = sample_proposal_dpp_batch(
+            s_loc.tree, ks[:, 0], axis_name="model", m_pad_global=m_pad)
+        zy = msh.gather_rows(s_loc.sp.Z, items, mask, axis_name=z_axis)
+        log_ratio, _ = jax.vmap(
+            lambda r_, m_: _log_det_ratio_rows(s_loc.sp, r_, m_))(zy, mask)
+        u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
+        accept = jnp.log(u) <= log_ratio
+        return items, mask, accept
+
+    f = shard_map(inner, mesh=mesh, in_specs=in_specs,
+                  out_specs=(P(None),) * 3, check_rep=False)
+    return f(sampler, keys)
+
+
 @jax.jit
 def _fanout_keys(req_keys: jax.Array, starts: jax.Array, offsets: jax.Array):
     """Per-proposal keys: key of proposal t for request i is
@@ -219,6 +279,7 @@ def sample_batched(
     max_trials: int = 1000,
     grow: int = 2,
     max_spec: int = 64,
+    mesh: Optional[Mesh] = None,
 ) -> RejectionSample:
     """Speculative SAMPLEREJECT for one request: each round draws a batch of
     ``n_spec`` proposals at once and accepts the first success; the batch
@@ -226,7 +287,7 @@ def sample_batched(
     Distribution-identical to ``sample`` (see module comment above)."""
     res = sample_batched_many(
         sampler, key[None], n_spec=n_spec, max_trials=max_trials,
-        grow=grow, max_spec=max_spec, split_keys=False,
+        grow=grow, max_spec=max_spec, split_keys=False, mesh=mesh,
     )
     return RejectionSample(
         items=res.items[0], mask=res.mask[0],
@@ -243,6 +304,7 @@ def sample_batched_many(
     grow: int = 2,
     max_spec: int = 64,
     split_keys: bool = True,
+    mesh: Optional[Mesh] = None,
 ) -> RejectionSample:
     """Speculative rejection sampling for many requests sharing each round.
 
@@ -256,6 +318,10 @@ def sample_batched_many(
     ``key``: either a single key (``split_keys=True``, split into ``n``
     request keys) or an (n, 2) array of per-request keys.  ``n_spec=None``
     auto-sizes the first round to ~E[#trials] (``auto_n_spec``).
+    ``mesh``: run every round item-sharded across the mesh "model" axis
+    (``_spec_round_sharded``); pass an already-placed ``shard_sampler``
+    output to avoid re-sharding per round.  Draws, trial counts, and
+    accept flags are bit-identical to the single-device path.
     Returns a stacked RejectionSample with leading dim n.
     """
     if n_spec is None:
@@ -291,7 +357,9 @@ def sample_batched_many(
             jnp.full((n_pad,), spent, jnp.uint32),
             jnp.arange(cur, dtype=jnp.uint32),
         )
-        items, mask, accept = _spec_round(sampler, keys)
+        items, mask, accept = (
+            _spec_round(sampler, keys) if mesh is None
+            else _spec_round_sharded(sampler, keys, mesh))
         acc = np.asarray(accept).reshape(n_pad, cur)[:n_act]
         items_h = np.asarray(items).reshape(n_pad, cur, r)[:n_act]
         mask_h = np.asarray(mask).reshape(n_pad, cur, r)[:n_act]

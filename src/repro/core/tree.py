@@ -17,13 +17,21 @@ M x M kernel.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .types import SpectralNDPP
+
+# levels with at most this many nodes are replicated on every shard and
+# scored with the stacked-matmul shallow path (plain and sharded alike);
+# deeper levels shard their node axis across the mesh "model" axis
+_SHALLOW_MAX = 32
 
 
 def proposal_eigens(sp: SpectralNDPP, eps: float = 1e-10) -> Tuple[jax.Array, jax.Array]:
@@ -197,7 +205,18 @@ def _leaf_scores_batch(w_blk: jax.Array, q: jax.Array) -> jax.Array:
         return jnp.einsum("nbi,nij,nbj->nb", w_blk, q, w_blk, optimize=True)
 
 
-def _descend_batch(tree: SampleTree, q: jax.Array, us: jax.Array) -> jax.Array:
+def _gather_row(W: jax.Array, j: jax.Array,
+                axis_name: Optional[str]) -> jax.Array:
+    """Row fetch via the shared masked-psum gather (plain when axis None)."""
+    from repro.models import sharding as msh
+
+    return msh.gather_row(W, j, axis_name)
+
+
+def _descend_batch(
+    tree: SampleTree, q: jax.Array, us: jax.Array, *,
+    axis_name: Optional[str] = None,
+) -> jax.Array:
     """Root-to-block traversal for N proposals in lockstep.
 
     q: (N, R, R) per-proposal conditioning projectors; us: (N, depth)
@@ -209,31 +228,53 @@ def _descend_batch(tree: SampleTree, q: jax.Array, us: jax.Array) -> jax.Array:
     gathers dominate HBM traffic at batch size N.  Shallow levels (few
     distinct nodes shared by all N lanes) are scored against *every* node
     with one stacked (nodes, R^2) x (R^2, N) matmul instead of per-lane
-    matrix gathers; deep levels (nodes >~ lanes) keep the gather."""
+    matrix gathers; deep levels (nodes >~ lanes) keep the gather.
+
+    With ``axis_name`` set this runs *inside* a ``shard_map``: shallow
+    levels (global node count <= _SHALLOW_MAX) are replicated on every
+    shard and use the identical stacked matmul; a deep level whose local
+    node count is smaller than its global 2^lvl is sharded, and the
+    left-child score is computed by its owner shard and psum'd (every other
+    shard contributes exact zeros) — so the sharded descent visits exactly
+    the same block as the single-device descent, bit for bit.
+    """
     n = q.shape[0]
     r = q.shape[-1]
     idx = jnp.zeros((n,), jnp.int32)
-    # levels whose whole node set is cheaper to score than to gather per lane
-    shallow = [lvl for lvl in range(1, tree.depth + 1)
-               if tree.levels[lvl].shape[0] <= 32]
+    depth = tree.depth
+    # levels whose whole node set is cheaper to score than to gather per
+    # lane — classified by *global* node count 2^lvl so the plain and
+    # sharded paths agree on the split
+    shallow = [lvl for lvl in range(1, depth + 1) if (1 << lvl) <= _SHALLOW_MAX]
     p_all = jnp.einsum("ij,nij->n", tree.levels[0][0], q)
+    offs = {}
     if shallow:
         stacked = jnp.concatenate(
             [tree.levels[lvl].reshape(-1, r * r) for lvl in shallow]
         )                                            # (sum 2^lvl, R^2)
         all_scores = stacked @ q.reshape(n, r * r).T  # (sum 2^lvl, N)
-        offs = {}
         off = 0
         for lvl in shallow:
             offs[lvl] = off
             off += tree.levels[lvl].shape[0]
-    for lvl in range(1, tree.depth + 1):
-        if lvl in (offs if shallow else {}):
-            s_l = all_scores[offs[lvl]:offs[lvl] + tree.levels[lvl].shape[0]]
+    shard = None if axis_name is None else jax.lax.axis_index(axis_name)
+    for lvl in range(1, depth + 1):
+        nodes = tree.levels[lvl]
+        if lvl in offs:
+            s_l = all_scores[offs[lvl]:offs[lvl] + nodes.shape[0]]
             p_left = jnp.take_along_axis(s_l.T, (2 * idx)[:, None], axis=1)[:, 0]
-        else:
-            left = tree.levels[lvl][2 * idx]        # (N, R, R) gather
+        elif axis_name is None or nodes.shape[0] == (1 << lvl):
+            left = nodes[2 * idx]                   # (N, R, R) gather
             p_left = jnp.einsum("nij,nij->n", q, left)
+        else:                                       # sharded level
+            n_loc = nodes.shape[0]
+            base = shard * n_loc
+            g = 2 * idx
+            own = (g >= base) & (g < base + n_loc)
+            left = nodes[jnp.clip(g - base, 0, n_loc - 1)]
+            p_left = jax.lax.psum(
+                jnp.where(own, jnp.einsum("nij,nij->n", q, left), 0.0),
+                axis_name)
         go_left = us[:, lvl - 1] * jnp.maximum(p_all, 1e-30) <= jnp.maximum(p_left, 0.0)
         idx = 2 * idx + jnp.where(go_left, 0, 1)
         p_all = jnp.maximum(jnp.where(go_left, p_left, p_all - p_left), 0.0)
@@ -241,7 +282,8 @@ def _descend_batch(tree: SampleTree, q: jax.Array, us: jax.Array) -> jax.Array:
 
 
 def sample_elementary_batch(
-    tree: SampleTree, e_masks: jax.Array, keys: jax.Array
+    tree: SampleTree, e_masks: jax.Array, keys: jax.Array, *,
+    axis_name: Optional[str] = None, m_pad_global: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """N elementary-DPP draws through the tree in one batched scan.
 
@@ -250,6 +292,12 @@ def sample_elementary_batch(
     Returns (items, mask), each (N, R).  Identical distribution to
     ``vmap(sample_elementary)`` but leaf scoring runs through the fused
     (N, block, R) kernel and tree nodes are gathered once per level.
+
+    With ``axis_name`` set (inside a ``shard_map``; ``m_pad_global`` =
+    unsharded row count of W), the leaf block is scored by the shard that
+    owns its rows and the chosen item's row is fetched the same way — each
+    a masked local lookup + psum of exact zeros, so draws stay bit-identical
+    to the single-device sampler.
     """
     n, r = e_masks.shape
     n_e = jnp.sum(e_masks.astype(jnp.int32), axis=1)           # (N,)
@@ -261,6 +309,10 @@ def sample_elementary_batch(
     )
     depth = max(tree.depth, 1)
     blk_ar = jnp.arange(tree.block)
+    w_rows = tree.W.shape[0]                       # local rows under shard_map
+    w_sharded = (axis_name is not None and m_pad_global is not None
+                 and w_rows != m_pad_global)
+    shard = None if axis_name is None else jax.lax.axis_index(axis_name)
 
     def cond(state):
         t, _, _ = state
@@ -273,15 +325,26 @@ def sample_elementary_batch(
         us = jax.vmap(
             lambda k: jax.random.uniform(k, (depth,), dtype=tree.W.dtype)
         )(kk[:, 0])
-        blk = _descend_batch(tree, q, us)                       # (N,)
-        rows = blk[:, None] * tree.block + blk_ar[None, :]      # (N, block)
-        w_blk = tree.W[rows]                                    # (N, block, R)
-        scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
+        blk = _descend_batch(tree, q, us, axis_name=axis_name)  # (N,)
+        if not w_sharded:
+            rows = blk[:, None] * tree.block + blk_ar[None, :]  # (N, block)
+            w_blk = tree.W[rows]                                # (N, block, R)
+            scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
+        else:
+            bps = w_rows // tree.block             # blocks per shard
+            base_blk = shard * bps
+            own = (blk >= base_blk) & (blk < base_blk + bps)
+            loc = jnp.clip(blk - base_blk, 0, bps - 1)
+            rows = loc[:, None] * tree.block + blk_ar[None, :]
+            w_blk = tree.W[rows]
+            raw = jnp.where(own[:, None], _leaf_scores_batch(w_blk, q), 0.0)
+            scores = jnp.maximum(jax.lax.psum(raw, axis_name), 0.0)
         j_local = jax.vmap(jax.random.categorical)(
             kk[:, 1], jnp.log(scores + 1e-30)
         )
         j = blk * tree.block + j_local
-        w_j = tree.W[j]                                         # (N, R)
+        w_j = _gather_row(tree.W, j,
+                          axis_name if w_sharded else None)     # (N, R)
         qw = jnp.einsum("nij,nj->ni", q, w_j)
         p = jnp.maximum(jnp.einsum("ni,ni->n", w_j, qw), 1e-30)
         q_new = q - qw[:, :, None] * qw[:, None, :] / p[:, None, None]
@@ -295,17 +358,122 @@ def sample_elementary_batch(
 
 
 def sample_proposal_dpp_batch(
-    tree: SampleTree, keys: jax.Array
+    tree: SampleTree, keys: jax.Array, *,
+    axis_name: Optional[str] = None, m_pad_global: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """N draws Y ~ DPP(Lhat), one per key in ``keys`` (N,): batched
-    eigenvector coins, then one batched tree descent for all proposals."""
+    eigenvector coins, then one batched tree descent for all proposals.
+    ``axis_name``/``m_pad_global`` thread the shard_map context down
+    (see ``sample_elementary_batch``)."""
     ks = jax.vmap(jax.random.split)(keys)                       # (N, 2, 2)
     probs = tree.lam / (tree.lam + 1.0)
     u_e = jax.vmap(
         lambda k: jax.random.uniform(k, probs.shape, dtype=probs.dtype)
     )(ks[:, 0])
     e_masks = u_e < probs[None, :]
-    return sample_elementary_batch(tree, e_masks, ks[:, 1])
+    return sample_elementary_batch(tree, e_masks, ks[:, 1],
+                                   axis_name=axis_name,
+                                   m_pad_global=m_pad_global)
+
+
+# --------------------------------------------------------------------------
+# Item-axis sharding: the flat tree maps onto a device mesh by splitting
+# every array along its item/block axis.  Shard s of S owns leaf blocks
+# [s * n_blocks/S, (s+1) * n_blocks/S) and the matching rows of W; levels
+# with <= _SHALLOW_MAX nodes (including the root) are replicated.  Because
+# the levels are built by pairwise sums of contiguous children, each shard's
+# slice of a deep level is exactly the sub-tree over its own blocks — no
+# node ever straddles a shard boundary.
+# --------------------------------------------------------------------------
+
+
+def tree_shard_specs(tree: SampleTree, mesh: Mesh) -> SampleTree:
+    """PartitionSpecs for a SampleTree on ``mesh`` (a SampleTree-shaped
+    pytree of specs, usable as shard_map in_specs or for device_put).
+
+    W and every level with more than ``_SHALLOW_MAX`` nodes shard their
+    leading axis over "model" (via the logical "items" axis rules in
+    ``repro.models.sharding``); shallow levels and lam replicate.  W is
+    only sharded when every shard's row slice is whole leaf blocks
+    (``M_pad % (S * block) == 0``) so a leaf block never straddles shards.
+    """
+    from repro.models import sharding as msh
+
+    s = msh.model_extent(mesh)
+    level_specs = []
+    for a in tree.levels:
+        axes = ("items", None, None) if a.shape[0] > _SHALLOW_MAX \
+            else (None, None, None)
+        level_specs.append(msh.logical_to_spec(mesh, axes, a.shape))
+    if tree.W.shape[0] % max(s * tree.block, 1) == 0:
+        w_spec = msh.logical_to_spec(mesh, ("items", None), tree.W.shape)
+    else:  # rows per shard would split a leaf block — replicate instead
+        w_spec = P(None, None)
+    return SampleTree(W=w_spec, lam=P(None), levels=tuple(level_specs),
+                      block=tree.block, M=tree.M)
+
+
+def shard_tree(tree: SampleTree, mesh: Mesh) -> SampleTree:
+    """Place a SampleTree on ``mesh``: deep levels and W live item-sharded
+    across devices, shallow levels replicated.  The returned tree samples
+    identically (bit for bit) through the ``*_sharded`` entry points."""
+    specs = tree_shard_specs(tree, mesh)
+    put = lambda a, sp: jax.device_put(a, NamedSharding(mesh, sp))  # noqa: E731
+    return SampleTree(
+        W=put(tree.W, specs.W), lam=put(tree.lam, specs.lam),
+        levels=tuple(put(a, sp) for a, sp in zip(tree.levels, specs.levels)),
+        block=tree.block, M=tree.M,
+    )
+
+
+def shard_spectral(sp: SpectralNDPP, mesh: Mesh) -> SpectralNDPP:
+    """Place a SpectralNDPP on ``mesh``: Z rows item-sharded (replicated
+    when M does not divide the mesh), sigma replicated."""
+    from repro.models import sharding as msh
+
+    return SpectralNDPP(
+        Z=jax.device_put(sp.Z, msh.named(mesh, ("items", None), sp.Z.shape)),
+        sigma=jax.device_put(sp.sigma, msh.named(mesh, (None,), sp.sigma.shape)),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def sample_proposal_dpp_batch_sharded(
+    tree: SampleTree, keys: jax.Array, mesh: Mesh
+) -> Tuple[jax.Array, jax.Array]:
+    """``sample_proposal_dpp_batch`` with the tree sharded over the mesh
+    "model" axis: deep-level descent and leaf scoring run on the shard that
+    owns the nodes/rows, cross-shard combination is a psum of exact zeros —
+    draws are bit-identical to the single-device sampler for any shard
+    count."""
+    specs = tree_shard_specs(tree, mesh)
+    m_pad = tree.W.shape[0]
+
+    def inner(tree_loc, keys):
+        return sample_proposal_dpp_batch(
+            tree_loc, keys, axis_name="model", m_pad_global=m_pad)
+
+    f = shard_map(inner, mesh=mesh, in_specs=(specs, P(None)),
+                  out_specs=(P(None), P(None)), check_rep=False)
+    return f(tree, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def sample_elementary_batch_sharded(
+    tree: SampleTree, e_masks: jax.Array, keys: jax.Array, mesh: Mesh
+) -> Tuple[jax.Array, jax.Array]:
+    """``sample_elementary_batch`` through a mesh-sharded tree (see
+    ``sample_proposal_dpp_batch_sharded``)."""
+    specs = tree_shard_specs(tree, mesh)
+    m_pad = tree.W.shape[0]
+
+    def inner(tree_loc, e_masks, keys):
+        return sample_elementary_batch(
+            tree_loc, e_masks, keys, axis_name="model", m_pad_global=m_pad)
+
+    f = shard_map(inner, mesh=mesh, in_specs=(specs, P(None), P(None)),
+                  out_specs=(P(None), P(None)), check_rep=False)
+    return f(tree, e_masks, keys)
 
 
 def sample_elementary_dense(

@@ -36,7 +36,18 @@ def _pytree_dataclass(cls):
 
 @_pytree_dataclass
 class NDPPParams:
-    """General low-rank NDPP kernel: ``L = V V^T + B (D - D^T) B^T``."""
+    """General low-rank NDPP kernel: ``L = V V^T + B (D - D^T) B^T``.
+
+    Attributes:
+      V: (M, K) symmetric-part factor — row i is item i's quality/feature
+        embedding; ``V V^T`` is the PSD part of the kernel.
+      B: (M, K) skew-part factor.
+      D: (K, K) unconstrained; only its skew part ``D - D^T`` enters L.
+
+    ``M`` is the catalog (ground-set) size, ``K`` the kernel rank; all
+    samplers cost polynomial in K and at most linear (tree/MCMC: sublinear
+    amortized) in M.
+    """
 
     V: jax.Array  # (M, K)
     B: jax.Array  # (M, K)

@@ -11,6 +11,8 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .bilinear import bilinear_batched_pallas, bilinear_pallas
 from .ref import bilinear_batched_ref, bilinear_ref
@@ -40,6 +42,29 @@ def bilinear(
     wp = jnp.pad(W, ((0, r_pad), (0, r_pad)))
     out = bilinear_pallas(zp, wp, block_m=m_blk, interpret=interpret)
     return out[:m]
+
+
+def bilinear_sharded(
+    Z: jax.Array, W: jax.Array, mesh: Mesh, *, block_m: int = 512,
+    force_interpret: bool = False,
+) -> jax.Array:
+    """``bilinear`` over a device mesh: every shard scores only its local
+    (M/S, R) rows against the replicated (R, R) inner matrix — bit-identical
+    values to the unsharded op, with the (M, R) rows kept device-local.
+    Returns the (M,) scores sharded over the mesh "model" axis.  Requires M
+    divisible by the mesh "model" extent."""
+    s = int(mesh.shape["model"])
+    if Z.shape[0] % s != 0:
+        raise ValueError(f"the mesh 'model' extent {s} must divide "
+                         f"M={Z.shape[0]}")
+
+    def inner(zl, w):
+        return bilinear(zl, w, block_m=block_m,
+                        force_interpret=force_interpret)
+
+    f = shard_map(inner, mesh=mesh, in_specs=(P("model", None), P(None)),
+                  out_specs=P("model"), check_rep=False)
+    return f(Z, W)
 
 
 def bilinear_batched(

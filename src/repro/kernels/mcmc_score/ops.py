@@ -13,6 +13,8 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .mcmc_score import score_all_pallas
 from .ref import score_all_ref
@@ -47,3 +49,59 @@ def score_all(
     ap = jnp.pad(A, ((0, 0), (0, r_pad), (0, r_pad)))
     out = score_all_pallas(zp, ap, block_m=m_blk, interpret=interpret)
     return out[:, :m]
+
+
+def score_all_sharded(
+    Z: jax.Array, A: jax.Array, mesh: Mesh, *, block_m: int = 512,
+    force_interpret: bool = False,
+) -> jax.Array:
+    """``score_all`` over a device mesh: each shard scores only its local
+    (M/S, R) row block of the catalog (Pallas kernel on TPU, einsum ref
+    elsewhere — per-row arithmetic is M-independent, so the values are
+    bit-identical to the unsharded scorer).  Returns the (C, M) scores
+    sharded along M over the mesh "model" axis; rows never leave their
+    device.  Requires M divisible by the mesh "model" extent."""
+    s = int(mesh.shape["model"])
+    if Z.shape[0] % s != 0:
+        raise ValueError(f"the mesh 'model' extent {s} must divide "
+                         f"M={Z.shape[0]}")
+
+    def inner(zl, a):
+        return score_all(zl, a, block_m=block_m,
+                         force_interpret=force_interpret)
+
+    f = shard_map(inner, mesh=mesh, in_specs=(P("model", None), P(None)),
+                  out_specs=P(None, "model"), check_rep=False)
+    return f(Z, A)
+
+
+def score_argmax_sharded(
+    Z: jax.Array, A: jax.Array, mesh: Mesh, *, block_m: int = 512,
+    force_interpret: bool = False,
+):
+    """Best candidate per chain without materializing (C, M) anywhere
+    replicated: each shard scores its local rows and reduces them to one
+    (C,) winner; only the (S, C) per-shard winning scores/indices are
+    all-gathered and argmax'd.  Returns (scores (C,), items (C,)) with
+    global item indices — the greedy/MAP pick at O(C) cross-shard traffic.
+    """
+    s = int(mesh.shape["model"])
+    if Z.shape[0] % s != 0:
+        raise ValueError(f"the mesh 'model' extent {s} must divide "
+                         f"M={Z.shape[0]}")
+
+    def inner(zl, a):
+        sc = score_all(zl, a, block_m=block_m,
+                       force_interpret=force_interpret)    # (C, M_loc)
+        base = jax.lax.axis_index("model") * zl.shape[0]
+        loc_max = sc.max(axis=1)
+        loc_arg = sc.argmax(axis=1).astype(jnp.int32) + base
+        all_max = jax.lax.all_gather(loc_max, "model")     # (S, C)
+        all_arg = jax.lax.all_gather(loc_arg, "model")
+        win = all_max.argmax(axis=0)                       # (C,)
+        c = jnp.arange(all_max.shape[1])
+        return all_max[win, c], all_arg[win, c]
+
+    f = shard_map(inner, mesh=mesh, in_specs=(P("model", None), P(None)),
+                  out_specs=(P(None), P(None)), check_rep=False)
+    return f(Z, A)

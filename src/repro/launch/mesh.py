@@ -21,6 +21,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_sampler_mesh(n_devices: int | None = None):
+    """1-D ("model",) mesh for item-axis-sharded NDPP sampling.
+
+    The samplers shard the catalog ("items") axis over "model"
+    (``repro.models.sharding`` maps the logical "items" axis there), so a
+    sampler mesh is just the first ``n_devices`` devices on one axis.  On a
+    CPU host, simulate a multi-device mesh by setting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax call.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, host has {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("model",))
+
+
 def make_host_mesh():
     """Whatever devices this host has, as a (data, model) mesh — used by
     tests/examples on CPU (1 device -> 1x1 mesh)."""

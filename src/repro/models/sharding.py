@@ -15,6 +15,7 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axes that map onto the tensor-parallel ("model") mesh axis
@@ -77,6 +78,69 @@ def constrain(x: jax.Array, mesh, axes: Tuple[Optional[str], ...]):
         return x
     spec = logical_to_spec(mesh, axes, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Cross-shard row gathers (sampler item-axis sharding).
+#
+# The NDPP samplers shard the catalog ("items") axis of (M, R) matrices over
+# the mesh "model" axis.  Subsets are tiny (<= 2K items), so gathering their
+# feature rows is a masked local lookup + psum: exactly one shard owns each
+# row, every other shard contributes exact floating-point zeros, and x + 0.0
+# is exact — the gathered rows are bit-identical to an unsharded gather.
+# --------------------------------------------------------------------------
+
+
+def model_extent(mesh: Mesh) -> int:
+    """Size of the mesh "model" axis; raises a clear error when the mesh
+    has no such axis (the sampler sharding entry points require one —
+    see ``repro.launch.mesh.make_sampler_mesh``)."""
+    if "model" not in mesh.axis_names:
+        raise ValueError(
+            f"mesh {mesh} has no 'model' axis; build sampler meshes with "
+            f"make_sampler_mesh (1-D ('model',) axis)")
+    return mesh_extent(mesh, ("model",))
+
+
+def shard_offset(n_local: int, axis_name: str) -> jax.Array:
+    """First global row index owned by this shard of an evenly-split axis."""
+    return jax.lax.axis_index(axis_name) * n_local
+
+
+def gather_row(Z: jax.Array, j: jax.Array, axis_name: Optional[str] = None) -> jax.Array:
+    """Row ``Z[j]`` of a (possibly row-sharded) (M, R) matrix.
+
+    ``j``: scalar (or batched (N,)) global row index.  With ``axis_name``
+    set, ``Z`` is the *local* (M/S, R) block inside a ``shard_map`` and the
+    row is fetched from its owner by masked-psum; otherwise a plain gather.
+    """
+    if axis_name is None:
+        return Z[j]
+    rps = Z.shape[0]
+    off = shard_offset(rps, axis_name)
+    own = (j >= off) & (j < off + rps)
+    loc = jnp.clip(j - off, 0, rps - 1)
+    return jax.lax.psum(
+        jnp.where(own[..., None], Z[loc], 0.0).astype(Z.dtype), axis_name)
+
+
+def gather_rows(
+    Z: jax.Array, items: jax.Array, mask: jax.Array,
+    axis_name: Optional[str] = None,
+) -> jax.Array:
+    """Masked subset rows ``Z[items] * mask`` with padding rows zeroed.
+
+    ``items``: (..., k_pad) global indices (-1 on padding slots), ``mask``:
+    (..., k_pad) validity.  Returns (..., k_pad, R).  Bit-identical between
+    the plain gather and the sharded masked-psum path (see module comment).
+    """
+    if axis_name is None:
+        return Z[jnp.maximum(items, 0)] * mask[..., None].astype(Z.dtype)
+    rps = Z.shape[0]
+    off = shard_offset(rps, axis_name)
+    own = (items >= off) & (items < off + rps) & mask
+    loc = jnp.clip(items - off, 0, rps - 1)
+    return jax.lax.psum(Z[loc] * own[..., None].astype(Z.dtype), axis_name)
 
 
 def specs_for_params(mesh: Mesh, logical_tree, shape_tree):

@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 
 from repro.core import (
     NDPPSampler,
@@ -30,6 +31,7 @@ from repro.core import (
     sample_batched_many,
     sample_cholesky,
 )
+from repro.core.rejection import shard_sampler
 from repro.core.types import x_from_sigma
 
 
@@ -77,18 +79,38 @@ def diverse_token_set(
 class FullVocabSampler:
     """Sublinear-in-vocab diverse sampling: one-time O(V K^2) preprocess
     (Youla + proposal eigens + tree), then O((K + k^3 log V) (1+w)^{K/2})
-    per draw (Algorithm 2)."""
+    per draw (Algorithm 2).
+
+    Args:
+      V, B: (vocab, K) low-rank kernel factors (quality / diversity).
+      D: (K, K) skew parameter; the kernel is ``V V^T + B (D - D^T) B^T``.
+      block: tree leaf-block size (items scored per leaf visit).
+      mesh: shard the vocab axis over the mesh "model" axis — the
+        proposal tree's deep levels, W, and the Z rows live device-local
+        (``shard_sampler``), so vocab size scales with the number of
+        devices; draws are bit-identical to the single-device sampler.
+    """
 
     def __init__(self, V: jax.Array, B: jax.Array, D: jax.Array,
-                 block: int = 256):
+                 block: int = 256, mesh: Optional[Mesh] = None):
+        self.mesh = mesh
         self.sampler: NDPPSampler = preprocess(V, B, D, block=block)
+        if mesh is not None:
+            self.sampler = shard_sampler(self.sampler, mesh)
 
     def sample(self, key: jax.Array, max_trials: int = 100):
+        """One draw.  Returns (items (2K,), mask (2K,), trials ()) —
+        ``items[mask]`` is the sampled token set.  Runs the sequential
+        while-loop sampler (unsharded even when a mesh is set; use
+        ``sample_many`` for the sharded batched path)."""
         res = rejection_sample(self.sampler, key, max_trials=max_trials)
         return res.items, res.mask, res.trials
 
     def sample_many(self, key: jax.Array, n: int, max_trials: int = 100):
         """n draws through the speculative batched engine: all requests
-        share one batched tree traversal + log-det ratio per round."""
-        res = sample_batched_many(self.sampler, key, n, max_trials=max_trials)
+        share one batched tree traversal + log-det ratio per round
+        (item-sharded across the mesh when one was given).  Returns
+        (items (n, 2K), mask (n, 2K), trials (n,))."""
+        res = sample_batched_many(self.sampler, key, n,
+                                  max_trials=max_trials, mesh=self.mesh)
         return res.items, res.mask, res.trials

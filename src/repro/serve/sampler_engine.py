@@ -37,19 +37,34 @@ from typing import Dict, List, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import mcmc as mcmc_core
 from repro.core.rejection import (
     NDPPSampler,
     _fanout_keys,
     _spec_round,
+    _spec_round_sharded,
     auto_n_spec,
+    shard_sampler,
 )
+from repro.core.tree import shard_spectral
 from repro.core.types import SpectralNDPP
 
 
 @dataclasses.dataclass
 class SampleRequest:
+    """One sampling request submitted to the engine.
+
+    Attributes:
+      rid: caller-chosen request id; keys the ``run()`` result dict.
+      seed: PRNG seed — proposal/step t of this request is always drawn
+        from ``fold_in(PRNGKey(seed), t)``, independent of scheduling.
+      max_trials: rejection-backend proposal budget (ignored by MCMC,
+        which always retires at step ``burn_in + thin``).
+      result: filled by the engine at retire time.
+    """
+
     rid: int
     seed: int = 0
     max_trials: int = 256
@@ -59,6 +74,16 @@ class SampleRequest:
 
 @dataclasses.dataclass
 class SampleResult:
+    """A retired request's draw.
+
+    Attributes:
+      items: (R,) padded item indices, R = 2K; -1 marks empty slots.
+      mask: (R,) validity mask (``items[mask]`` is the sampled subset).
+      trials: proposals consumed (rejection) or MH steps taken (MCMC).
+      accepted: False iff the rejection budget was exhausted (the last
+        proposal is returned anyway; always True for MCMC).
+    """
+
     items: np.ndarray        # (R,) padded item indices (-1 = empty slot)
     mask: np.ndarray         # (R,) validity mask
     trials: int              # proposals consumed by this request
@@ -75,6 +100,29 @@ class SamplerEngine:
     ``mcmc_burn_in + mcmc_thin``.  The MCMC backend accepts either a
     preprocessed ``NDPPSampler`` or a bare ``SpectralNDPP`` (no proposal
     tree is needed).
+
+    Args:
+      sampler: ``NDPPSampler`` (required for rejection) or, for MCMC, a
+        bare ``SpectralNDPP``.
+      n_slots: pool size — concurrent in-flight requests per tick.
+      n_spec: rejection speculation depth per slot per tick (default
+        auto-sizes to ~E[#trials]).
+      backend: "rejection" or "mcmc".
+      mcmc_burn_in / mcmc_thin: a chain retires with its state at step
+        ``burn_in + thin``.
+      mcmc_steps_per_tick: MH steps the whole pool advances per tick
+        (default ``min(refresh_every, burn_in + thin)``).
+      mcmc_k: None = up/down chain; an integer runs the fixed-size swap
+        chain with stochastic-greedy size-k starts.
+      mcmc_p_swap: swap-move mixture weight of the up/down chain.
+      mcmc_refresh_every: exact O(R^3) inverse-cache refresh period.
+      mesh: shard the item axis across the mesh "model" axis.  The
+        engine places the sampler arrays once (``shard_sampler`` /
+        ``shard_spectral``) and every tick runs the sharded round /
+        chain step: per-device catalog memory drops to M/S rows while
+        results stay bit-identical to the unsharded engine (the
+        fold_in(request_key, t) exactness guarantee is untouched).
+        Requires M divisible by the mesh "model" extent.
     """
 
     def __init__(self, sampler: Union[NDPPSampler, SpectralNDPP],
@@ -82,10 +130,12 @@ class SamplerEngine:
                  backend: str = "rejection", mcmc_burn_in: int = 256,
                  mcmc_thin: int = 16, mcmc_steps_per_tick: Optional[int] = None,
                  mcmc_k: Optional[int] = None, mcmc_p_swap: float = 0.25,
-                 mcmc_refresh_every: int = 64):
+                 mcmc_refresh_every: int = 64,
+                 mesh: Optional[Mesh] = None):
         if backend not in ("rejection", "mcmc"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
+        self.mesh = mesh
         if isinstance(sampler, NDPPSampler):
             self.sampler: Optional[NDPPSampler] = sampler
             self.sp = sampler.sp
@@ -95,6 +145,29 @@ class SamplerEngine:
                     "backend='rejection' needs a preprocessed NDPPSampler")
             self.sampler = None
             self.sp = sampler
+        if mesh is not None:
+            from repro.models.sharding import model_extent
+
+            s = model_extent(mesh)
+            if self.sp.M % s != 0:
+                raise ValueError(
+                    f"the mesh 'model' extent {s} must divide the catalog "
+                    f"size M={self.sp.M} — pad the catalog or shrink the "
+                    f"mesh")
+            if self.sampler is not None:
+                tree = self.sampler.tree
+                if tree.W.shape[0] % (s * tree.block) != 0:
+                    # a "sharded" engine that silently replicates the tree
+                    # (the dominant memory) is a config bug, not a fallback
+                    raise ValueError(
+                        f"cannot shard the proposal tree: each shard must "
+                        f"own whole leaf blocks, i.e. {s} * block="
+                        f"{tree.block} must divide M_pad={tree.W.shape[0]} "
+                        f"— use a smaller block or shrink the mesh")
+                self.sampler = shard_sampler(self.sampler, mesh)
+                self.sp = self.sampler.sp
+            else:
+                self.sp = shard_spectral(self.sp, mesh)
         self.n_slots = n_slots
         if backend == "rejection":
             # default the speculation depth to ~E[#trials] so most requests
@@ -169,10 +242,18 @@ class SamplerEngine:
             return False
         self.ticks += 1
         n_steps = self.mcmc_steps_per_tick
-        states, items_tr, mask_tr, _ = mcmc_core.run_chains(
-            self.sp, jnp.asarray(self.slot_key), self._states,
-            n_steps=n_steps, fixed=self.mcmc_k is not None,
-            p_swap=self.mcmc_p_swap, refresh_every=self.mcmc_refresh_every)
+        if self.mesh is None:
+            states, items_tr, mask_tr, _ = mcmc_core.run_chains(
+                self.sp, jnp.asarray(self.slot_key), self._states,
+                n_steps=n_steps, fixed=self.mcmc_k is not None,
+                p_swap=self.mcmc_p_swap,
+                refresh_every=self.mcmc_refresh_every)
+        else:
+            states, items_tr, mask_tr, _ = mcmc_core.run_chains_sharded(
+                self.sp, jnp.asarray(self.slot_key), self._states,
+                mesh=self.mesh, n_steps=n_steps,
+                fixed=self.mcmc_k is not None, p_swap=self.mcmc_p_swap,
+                refresh_every=self.mcmc_refresh_every)
         self._states = states
         items_h = np.asarray(items_tr)   # (S, n_steps, R)
         mask_h = np.asarray(mask_tr)
@@ -201,7 +282,9 @@ class SamplerEngine:
             jnp.asarray(self.slot_trials, jnp.uint32),
             jnp.arange(self.n_spec, dtype=jnp.uint32),
         )
-        items, mask, accept = _spec_round(self.sampler, keys)
+        items, mask, accept = (
+            _spec_round(self.sampler, keys) if self.mesh is None
+            else _spec_round_sharded(self.sampler, keys, self.mesh))
         r = items.shape[-1]
         acc = np.asarray(accept).reshape(self.n_slots, self.n_spec)
         items_h = np.asarray(items).reshape(self.n_slots, self.n_spec, r)
