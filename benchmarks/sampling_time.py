@@ -315,6 +315,90 @@ def run_sharded(ms: List[int] = None, k: int = 32, n_requests: int = 64,
     return rows
 
 
+def run_catalog(ms: List[int] = None, k: int = 32, batch: int = 64,
+                n_requests: int = 32, smoke: bool = False):
+    """Dynamic-catalog lifecycle costs (``serve.catalog``).
+
+    For each catalog size M: (a) wall time of one *incremental* update
+    batch of ``batch`` rows — O(B (block + log M) R^2) tree path updates
+    + the R x R dual-eigens refresh — against a from-scratch rebuild of
+    the same proposal (O(M R^2) ``build_dual_proposal``), and (b) the
+    stale-vs-fresh rejection rate: ~10% of items are deleted with the
+    snapshot reinstall deferred, and both the predicted trial counts
+    (det(L̂_snap+I)/det(L_live+I)) and the measured mean trials over
+    ``n_requests`` draws are recorded before and after ``refresh()``.
+    Draws under the stale snapshot remain exactly distributed (tested in
+    tests/test_dynamic_catalog.py); only the rate degrades.
+    """
+    from repro.core.dynamic import build_dual_proposal
+    from repro.serve.catalog import Catalog
+
+    if smoke:
+        ms = ms or [2 ** 10]
+        batch, n_requests = 16, 8
+    ms = ms or [2 ** 12, 2 ** 14]
+    rows = []
+    for m in ms:
+        v, b, d = synthetic_features(m, k // 2, seed=0)
+        scale = 1.0 / np.sqrt(m)
+        v, b = v * scale, b * scale
+        cat = Catalog(v, b, d, block=64, staleness=1 << 30)
+        rng = np.random.default_rng(0)
+        ids = rng.choice(m, size=batch, replace=False)
+        vv = rng.normal(size=(batch, k // 2)).astype(np.float32) * scale
+        bb = rng.normal(size=(batch, k // 2)).astype(np.float32) * scale
+
+        def upd():
+            cat.update_items(ids, vv, bb)
+            # default update_items reinstalls the snapshot, so the state's
+            # proposal is the freshly maintained tree
+            jax.block_until_ready(cat.state().proposal.tree.levels[-1])
+
+        t_upd = _time(upd)
+
+        def rebuild():
+            p = build_dual_proposal(cat.state().sp, block=64)
+            jax.block_until_ready(p.tree.levels[-1])
+
+        t_rb = _time(rebuild)
+
+        n_del = max(1, m // 10)
+        dels = rng.choice(cat.alive_ids(), size=n_del, replace=False)
+        cat.delete_items(dels)
+        st = cat.state()
+        assert st.stale
+        et_stale = st.expected_trials()
+        res_stale = cat.sample_many(jax.random.PRNGKey(1), n_requests,
+                                    max_trials=2000)
+        tr_stale = float(np.asarray(res_stale.trials, np.float64).mean())
+        cat.refresh()
+        # predicted/measured "fresh" pair on the SAME post-delete kernel as
+        # the measured draws (the pre-delete rate is a different kernel's)
+        et_fresh = cat.state().expected_trials()
+        res_fresh = cat.sample_many(jax.random.PRNGKey(1), n_requests,
+                                    max_trials=2000)
+        tr_fresh = float(np.asarray(res_fresh.trials, np.float64).mean())
+
+        row = dict(M=m, K=k, update_batch=batch,
+                   incr_update_s=t_upd, rebuild_s=t_rb,
+                   update_speedup=t_rb / max(t_upd, 1e-9),
+                   update_rows_ps=batch / max(t_upd, 1e-9),
+                   deleted_frac=n_del / m,
+                   expected_trials_fresh=et_fresh,
+                   expected_trials_stale=et_stale,
+                   measured_trials_fresh=tr_fresh,
+                   measured_trials_stale=tr_stale)
+        rows.append(row)
+        print(
+            f"M=2^{int(np.log2(m)):2d} upd[{batch}]={t_upd*1e3:7.1f}ms "
+            f"rebuild={t_rb*1e3:7.1f}ms (x{row['update_speedup']:5.1f}) "
+            f"{row['update_rows_ps']:8.0f} rows/s | trials "
+            f"stale={tr_stale:5.2f}/{et_stale:5.2f} "
+            f"fresh={tr_fresh:5.2f}/{et_fresh:5.2f}"
+        )
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     import os
@@ -322,7 +406,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=["latency", "batched", "mcmc", "sharded",
-                             "both", "all"],
+                             "catalog", "both", "all"],
                     default="both")
     ap.add_argument("--n-requests", type=int, default=64)
     ap.add_argument("--n-spec", type=int, default=None,
@@ -340,8 +424,9 @@ if __name__ == "__main__":
         "batched": ("batched",),
         "mcmc": ("mcmc",),
         "sharded": ("sharded",),
+        "catalog": ("catalog",),
         "both": ("latency", "batched"),
-        "all": ("latency", "batched", "mcmc", "sharded"),
+        "all": ("latency", "batched", "mcmc", "sharded", "catalog"),
     }[args.mode]
     if "sharded" in modes and args.devices > 1:
         # must land before the first jax backend touch in this process;
@@ -367,6 +452,8 @@ if __name__ == "__main__":
         results["sharded"] = run_sharded(n_requests=args.n_requests,
                                          n_spec=args.n_spec,
                                          smoke=args.smoke)
+    if "catalog" in modes:
+        results["catalog"] = run_catalog(smoke=args.smoke)
     if args.out:
         # merge into any existing file so a partial-mode run never drops
         # another mode's tracked rows (e.g. `--mode batched` keeps the

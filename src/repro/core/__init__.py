@@ -6,6 +6,7 @@ Public API:
   cholesky   — linear-time O(M K^2) exact sampler (Alg. 1 RHS)
   tree       — proposal eigens + flat tree + elementary DPP sampling (Alg. 3)
   rejection  — sublinear-time rejection sampler (Alg. 2) + Theorem 2 rates
+  dynamic    — incremental dual-form proposal maintenance (mutable catalogs)
   mcmc       — exact-target up/down/swap Metropolis chains, O(K^2)/step
   learning   — ONDPP objective (Eq. 14) + baselines + constraint projection
   map_inference — greedy conditioning / MPR
@@ -20,7 +21,12 @@ from .types import (  # noqa: F401
     dense_l_spectral,
     dense_l_hat,
 )
-from .youla import youla_decompose, spectral_from_params  # noqa: F401
+from .youla import (  # noqa: F401
+    youla_decompose,
+    youla_transform_np,
+    spectral_from_params,
+    spectral_from_transform,
+)
 from .cholesky import (  # noqa: F401
     marginal_inner,
     marginal_inner_from_params,
@@ -33,6 +39,7 @@ from .cholesky import (  # noqa: F401
 from .tree import (  # noqa: F401
     SampleTree,
     construct_tree,
+    dual_q0,
     proposal_eigens,
     sample_proposal_dpp,
     sample_proposal_dpp_batch,
@@ -44,6 +51,8 @@ from .tree import (  # noqa: F401
     shard_spectral,
     shard_tree,
     tree_shard_specs,
+    update_rows,
+    update_rows_sharded,
 )
 from .rejection import (  # noqa: F401
     NDPPSampler,
@@ -83,12 +92,23 @@ from .kdpp import (  # noqa: F401
     sample_kdpp,
     sample_k_ndpp,
 )
+from .dynamic import (  # noqa: F401
+    DualProposal,
+    auto_n_spec_dynamic,
+    build_dual_proposal,
+    dual_eigens,
+    dual_rows,
+    expected_trials_dynamic,
+    sample_dynamic_many,
+    update_proposal,
+)
 from .mcmc import (  # noqa: F401
     MCMCSample,
     MCMCState,
     add_ratio,
     init_empty,
     init_greedy,
+    reanchor,
     remove_ratio,
     run_chains,
     run_chains_sharded,

@@ -103,6 +103,30 @@ def refresh(sp: SpectralNDPP, state: MCMCState) -> MCMCState:
     return state._replace(minv=jnp.linalg.inv(ly))
 
 
+@jax.jit
+def reanchor(sp: SpectralNDPP, states: MCMCState) -> MCMCState:
+    """Re-anchor a pool of chains on a new catalog version.
+
+    After a ``SamplerEngine.swap_catalog`` the cached inverse of every
+    in-flight chain refers to the *old* Z rows; this (vmapped over the
+    leading chain axis) drops subset items whose live row is now exactly
+    zero (deleted items — keeping them would pin the chain on a
+    zero-determinant state the up/down moves can only leave through the
+    removal pivot), then recomputes each cached inverse exactly against
+    the new rows.  Step counters are preserved, so the
+    ``fold_in(chain_key, t)`` schedule — and hence a chain's subsequent
+    randomness — is unaffected by when the swap happened.
+    """
+    def one(st: MCMCState) -> MCMCState:
+        rows = sp.Z[jnp.maximum(st.items, 0)]
+        live = (jnp.abs(rows) > 0).any(axis=1)
+        mask = st.mask & live
+        items = jnp.where(mask, st.items, -1)
+        return refresh(sp, st._replace(items=items, mask=mask))
+
+    return jax.vmap(one)(states)
+
+
 def init_empty(sp: SpectralNDPP) -> MCMCState:
     """Start at Y = ∅ (det = 1, inverse = identity).
 

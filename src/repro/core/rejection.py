@@ -83,26 +83,44 @@ def _masked_rows(Z: jax.Array, items: jax.Array, mask: jax.Array) -> jax.Array:
 
 
 def log_det_ratio(
-    sp: SpectralNDPP, items: jax.Array, mask: jax.Array
+    sp: SpectralNDPP, items: jax.Array, mask: jax.Array,
+    live_z: Optional[jax.Array] = None, live_x: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """(log det(L_Y) - log det(Lhat_Y), sign of det(L_Y)) with padded Y.
 
     Both submatrices are built in the 2K-dim feature space: L_Y = Z_Y X Z_Y^T
     (k_pad x k_pad) with unit diagonal on padding rows so the padding
     contributes a factor of exactly 1.
+
+    ``live_z`` / ``live_x`` override the *numerator* only: the acceptance
+    test then scores the current (live) kernel ``live_z X_live live_z^T``
+    while the denominator stays the proposal L̂ that ``sp`` actually sampled
+    from — the stale-proposal acceptance of the dynamic catalog
+    (``core.dynamic`` / ``serve.catalog``).  Draws remain exactly
+    distributed as the live kernel whenever the stale proposal still
+    dominates it (deletes / row downscales); a live row zeroed by a delete
+    makes sign(det L_Y) = 0 here, so deleted items are rejected with
+    probability one.
     """
-    return _log_det_ratio_rows(sp, _masked_rows(sp.Z, items, mask), mask)
+    zy = _masked_rows(sp.Z, items, mask)
+    live_rows = None if live_z is None else _masked_rows(live_z, items, mask)
+    return _log_det_ratio_rows(sp, zy, mask, live_rows=live_rows,
+                               live_x=live_x)
 
 
 def _log_det_ratio_rows(
-    sp: SpectralNDPP, zy: jax.Array, mask: jax.Array
+    sp: SpectralNDPP, zy: jax.Array, mask: jax.Array,
+    live_rows: Optional[jax.Array] = None,
+    live_x: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """``log_det_ratio`` from pre-gathered (k_pad, 2K) subset rows ``zy``
     (padding rows already zeroed) — the sharded round gathers rows across
-    shards first and shares this 2K-space math."""
-    x = sp.x_matrix()
+    shards first and shares this 2K-space math.  ``live_rows``/``live_x``:
+    pre-gathered numerator overrides (see ``log_det_ratio``)."""
+    x = sp.x_matrix() if live_x is None else live_x
+    num = zy if live_rows is None else live_rows
     pad_eye = jnp.diag((~mask).astype(zy.dtype))
-    l_y = zy @ x @ zy.T + pad_eye
+    l_y = num @ x @ num.T + pad_eye
     lhat_y = (zy * sp.x_diag_hat()[None, :]) @ zy.T + pad_eye
     sign_l, logdet_l = jnp.linalg.slogdet(l_y)
     sign_h, logdet_h = jnp.linalg.slogdet(lhat_y)
@@ -333,8 +351,27 @@ def sample_batched_many(
     else:
         req_keys = jnp.asarray(key)
         n = req_keys.shape[0]
-    r = sampler.tree.R
+    round_fn = (
+        (lambda keys: _spec_round(sampler, keys)) if mesh is None
+        else (lambda keys: _spec_round_sharded(sampler, keys, mesh)))
+    return drive_rounds(round_fn, req_keys, sampler.tree.R, n_spec=n_spec,
+                        max_trials=max_trials, grow=grow, max_spec=max_spec)
 
+
+def drive_rounds(
+    round_fn, req_keys: jax.Array, r: int, *, n_spec: int,
+    max_trials: int = 1000, grow: int = 2, max_spec: int = 64,
+) -> RejectionSample:
+    """Speculative-round driver shared by the static sampler and the
+    dynamic-catalog sampler (``core.dynamic.sample_state_many``).
+
+    ``round_fn(keys)`` scores one proposal per (P, 2) key and returns
+    (items, mask, accept); this loop owns the retire-first-acceptance /
+    double-on-miss scheduling around it.  Proposal t of request i is always
+    keyed ``fold_in(req_keys[i], t)``, so results are independent of the
+    batching schedule and of which round function runs the proposals.
+    """
+    n = req_keys.shape[0]
     items_out = np.full((n, r), -1, np.int32)
     mask_out = np.zeros((n, r), bool)
     trials_out = np.zeros((n,), np.int32)
@@ -357,9 +394,7 @@ def sample_batched_many(
             jnp.full((n_pad,), spent, jnp.uint32),
             jnp.arange(cur, dtype=jnp.uint32),
         )
-        items, mask, accept = (
-            _spec_round(sampler, keys) if mesh is None
-            else _spec_round_sharded(sampler, keys, mesh))
+        items, mask, accept = round_fn(keys)
         acc = np.asarray(accept).reshape(n_pad, cur)[:n_act]
         items_h = np.asarray(items).reshape(n_pad, cur, r)[:n_act]
         mask_h = np.asarray(mask).reshape(n_pad, cur, r)[:n_act]

@@ -103,7 +103,7 @@ def construct_tree(lam: jax.Array, W: jax.Array, block: int = 64) -> SampleTree:
         from repro.kernels.tree_sum import ops as _ops
 
         leaf = _ops.block_outer_sums(wp, block)
-    except Exception:  # pragma: no cover
+    except ImportError:  # pragma: no cover - kernel package unavailable
         leaf = jnp.einsum("nbi,nbj->nij", wp.reshape(n_blocks, block, r),
                           wp.reshape(n_blocks, block, r))
     levels = [leaf]
@@ -117,6 +117,166 @@ def construct_tree(lam: jax.Array, W: jax.Array, block: int = 64) -> SampleTree:
 def _leaf_scores(w_blk: jax.Array, q: jax.Array) -> jax.Array:
     """Bilinear scores for one leaf block: (block, R) x (R, R) -> (block,)."""
     return jnp.einsum("bi,ij,bj->b", w_blk, q, w_blk, optimize=True)
+
+
+# --------------------------------------------------------------------------
+# Incremental maintenance: a row change perturbs exactly one leaf block and
+# its O(log M) ancestors.  Every touched node is *recomputed* through the
+# identical arithmetic construct_tree uses (same per-block Gram contraction,
+# parent = left + right), never delta-patched, so the maintained tree is
+# BIT-equal to a from-scratch rebuild on the mutated rows — the dynamic-
+# catalog counterpart of the sharding invariant (docs/architecture.md).
+# --------------------------------------------------------------------------
+
+
+def update_rows(tree: SampleTree, idx: jax.Array, rows: jax.Array,
+                lam: Optional[jax.Array] = None) -> SampleTree:
+    """Batched O(B (block + log M) R^2) row update: ``W[idx] <- rows``.
+
+    ``idx``: (B,) unique row indices (duplicates hitting the same *block*
+    are fine; duplicate row indices are not), ``rows``: (B, R).  Touched
+    leaf blocks are recomputed by the ``tree_update`` kernel path and the
+    touched root paths resummed — bit-equal to ``construct_tree`` on the
+    updated W.  ``lam`` optionally replaces the stored eigenvalues (the
+    dual refresh path of ``core.dynamic``).
+    """
+    try:
+        from repro.kernels.tree_sum import ops as _ops
+
+        levels, w_new = _ops.tree_update(tree.levels, tree.W, idx, rows,
+                                         tree.block)
+    except ImportError:  # pragma: no cover - kernel package unavailable
+        w_new = tree.W.at[idx].set(rows)
+        blks = (idx // tree.block).astype(jnp.int32)
+        gathered = w_new[blks[:, None] * tree.block
+                         + jnp.arange(tree.block)[None, :]]
+        grams = jnp.einsum("nbi,nbj->nij", gathered.astype(jnp.float32),
+                           gathered.astype(jnp.float32))
+        levels = [tree.levels[-1].at[blks].set(
+            grams.astype(tree.levels[-1].dtype))]
+        nodes = blks
+        for lvl in range(tree.depth - 1, -1, -1):
+            nodes = nodes // 2
+            child = levels[0]
+            levels.insert(0, tree.levels[lvl].at[nodes].set(
+                child[2 * nodes] + child[2 * nodes + 1]))
+        levels = tuple(levels)
+    return SampleTree(W=w_new, lam=tree.lam if lam is None else lam,
+                      levels=tuple(levels), block=tree.block, M=tree.M)
+
+
+def _update_rows_local(
+    tree: SampleTree, idx: jax.Array, rows: jax.Array, *,
+    axis_name: str, m_pad_global: int,
+) -> SampleTree:
+    """``update_rows`` body inside a ``shard_map`` over an item-sharded tree.
+
+    Each update is routed to the shard owning its rows: the owner scatters
+    the W rows, recomputes the touched leaf Gram, and patches its local
+    slice of every sharded level; levels that are replicated (the shallow
+    levels, `tree_shard_specs`) receive the owner's recomputed value through
+    a psum to which every other shard contributes exact 0.0 — so the sharded
+    maintained tree stays bit-equal to the plain ``update_rows`` result (and
+    hence to a from-scratch ``construct_tree``).
+    """
+    from repro.kernels.tree_sum import ops as _ops
+
+    block, depth = tree.block, tree.depth
+    n_blocks_global = m_pad_global // block
+    shard = jax.lax.axis_index(axis_name)
+    w_loc = tree.W
+    rps = w_loc.shape[0]
+    w_sharded = rps != m_pad_global
+    blks = (idx // block).astype(jnp.int32)
+    if w_sharded:
+        off = shard * rps
+        own = (idx >= off) & (idx < off + rps)
+        # non-owned updates get a positive out-of-bounds index -> dropped
+        w_loc = w_loc.at[jnp.where(own, idx - off, rps)].set(rows,
+                                                             mode="drop")
+        bps = rps // block
+        own_blk = (blks >= shard * bps) & (blks < (shard + 1) * bps)
+        loc_blk = jnp.clip(blks - shard * bps, 0, bps - 1)
+        g_loc = _ops.gathered_block_grams(w_loc, loc_blk, block)
+        vals = jax.lax.psum(
+            jnp.where(own_blk[:, None, None], g_loc, 0.0), axis_name)
+    else:
+        w_loc = w_loc.at[idx].set(rows)
+        vals = _ops.gathered_block_grams(w_loc, blks, block)
+    vals = vals.astype(tree.levels[-1].dtype)
+
+    # walk leaf -> root carrying the *replicated* recomputed node values;
+    # sharded levels scatter owner-locally, replicated levels everywhere
+    new_levels = []
+    nodes = blks
+    n_nodes = n_blocks_global
+    for lvl in range(depth, -1, -1):
+        arr = tree.levels[lvl]
+        n_loc = arr.shape[0]
+        if n_loc != n_nodes:                      # sharded level
+            base = shard * n_loc
+            own_n = (nodes >= base) & (nodes < base + n_loc)
+            arr = arr.at[jnp.where(own_n, nodes - base, n_loc)].set(
+                vals, mode="drop")
+        else:                                     # replicated level
+            arr = arr.at[nodes].set(vals)
+        new_levels.insert(0, arr)
+        if lvl == 0:
+            break
+        parents = nodes // 2
+        if n_loc != n_nodes:                      # sharded children: fetch
+            base = shard * n_loc                  # each from its owner
+            def child(g):
+                own_c = (g >= base) & (g < base + n_loc)
+                return jnp.where(own_c[:, None, None],
+                                 arr[jnp.clip(g - base, 0, n_loc - 1)], 0.0)
+            vals = jax.lax.psum(
+                child(2 * parents) + child(2 * parents + 1), axis_name)
+        else:
+            vals = arr[2 * parents] + arr[2 * parents + 1]
+        nodes = parents
+        n_nodes //= 2
+    return SampleTree(W=w_loc, lam=tree.lam, levels=tuple(new_levels),
+                      block=tree.block, M=tree.M)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def update_rows_sharded(
+    tree: SampleTree, idx: jax.Array, rows: jax.Array, mesh: Mesh
+) -> SampleTree:
+    """``update_rows`` for a mesh-sharded tree (``shard_tree`` layout):
+    every update batch is routed to the owning shard, replicated shallow
+    levels are patched by a psum of owner-local recomputed values (exact
+    zeros elsewhere) — the maintained tree is bit-equal to the plain path
+    and to a from-scratch rebuild.  idx/rows are replicated inputs."""
+    specs = tree_shard_specs(tree, mesh)
+    m_pad = tree.W.shape[0]
+
+    def inner(tree_loc, idx, rows):
+        return _update_rows_local(tree_loc, idx, rows, axis_name="model",
+                                  m_pad_global=m_pad)
+
+    f = shard_map(inner, mesh=mesh, in_specs=(specs, P(None), P(None)),
+                  out_specs=specs, check_rep=False)
+    return f(tree, idx, rows)
+
+
+def dual_q0(u: jax.Array, lam: jax.Array, e_masks: jax.Array,
+            eps: float = 1e-10) -> jax.Array:
+    """Elementary-DPP projectors for a *dual* tree (rows a_j = z_j x̂_j^1/2).
+
+    With (lam, u) the eigenpairs of the R x R dual Gram C = AᵀA (the tree
+    root), the elementary DPP for eigenvector set E has marginal kernel
+    A Q0 Aᵀ with Q0 = U_E diag(1/λ_E) U_Eᵀ — the same bilinear-score /
+    rank-1-downdate machinery as the orthonormal-row (primal) tree, reached
+    by the basis change w_j = diag(λ)^{-1/2} Uᵀ a_j.  e_masks: (N, R) ->
+    (N, R, R) per-proposal initial projectors.  Null directions (λ <= eps)
+    are never selected (their coin probability λ/(1+λ) is 0) and contribute
+    zero here.
+    """
+    inv = jnp.where(lam > eps, 1.0 / jnp.maximum(lam, eps), 0.0)
+    w = e_masks.astype(u.dtype) * inv[None, :]
+    return jnp.einsum("ik,nk,jk->nij", u, w, u)
 
 
 def _descend(tree: SampleTree, q: jax.Array, u: jax.Array) -> jax.Array:
@@ -201,7 +361,7 @@ def _leaf_scores_batch(w_blk: jax.Array, q: jax.Array) -> jax.Array:
         from repro.kernels.bilinear import ops as _ops
 
         return _ops.bilinear_batched(w_blk, q)
-    except Exception:  # pragma: no cover - kernel package unavailable
+    except ImportError:  # pragma: no cover - kernel package unavailable
         return jnp.einsum("nbi,nij,nbj->nb", w_blk, q, w_blk, optimize=True)
 
 
@@ -284,6 +444,7 @@ def _descend_batch(
 def sample_elementary_batch(
     tree: SampleTree, e_masks: jax.Array, keys: jax.Array, *,
     axis_name: Optional[str] = None, m_pad_global: Optional[int] = None,
+    q0: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """N elementary-DPP draws through the tree in one batched scan.
 
@@ -292,6 +453,11 @@ def sample_elementary_batch(
     Returns (items, mask), each (N, R).  Identical distribution to
     ``vmap(sample_elementary)`` but leaf scoring runs through the fused
     (N, block, R) kernel and tree nodes are gathered once per level.
+
+    ``q0`` overrides the (N, R, R) initial conditioning projectors — the
+    dual-tree path (rows a_j instead of orthonormal w_j) passes
+    ``dual_q0(u, lam, e_masks)`` here; the default is the orthonormal-basis
+    projector diag(e_mask).
 
     With ``axis_name`` set (inside a ``shard_map``; ``m_pad_global`` =
     unsharded row count of W), the leaf block is scored by the shard that
@@ -302,7 +468,9 @@ def sample_elementary_batch(
     n, r = e_masks.shape
     n_e = jnp.sum(e_masks.astype(jnp.int32), axis=1)           # (N,)
     n_e_max = jnp.max(n_e)
-    q0 = e_masks[:, :, None].astype(tree.W.dtype) * jnp.eye(r, dtype=tree.W.dtype)[None]
+    if q0 is None:
+        q0 = e_masks[:, :, None].astype(tree.W.dtype) \
+            * jnp.eye(r, dtype=tree.W.dtype)[None]
     # (r, N, 2): per-proposal, per-step key streams
     step_keys = jnp.swapaxes(
         jax.vmap(lambda k: jax.random.split(k, r))(keys), 0, 1
@@ -360,20 +528,25 @@ def sample_elementary_batch(
 def sample_proposal_dpp_batch(
     tree: SampleTree, keys: jax.Array, *,
     axis_name: Optional[str] = None, m_pad_global: Optional[int] = None,
+    dual_u: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """N draws Y ~ DPP(Lhat), one per key in ``keys`` (N,): batched
     eigenvector coins, then one batched tree descent for all proposals.
-    ``axis_name``/``m_pad_global`` thread the shard_map context down
-    (see ``sample_elementary_batch``)."""
+    ``dual_u``: (R, R) eigenvectors of the dual Gram when ``tree`` holds
+    dual rows (``core.dynamic``) — the coins still use ``tree.lam`` (the
+    dual eigenvalues equal L̂'s nonzero spectrum) and the conditioning
+    projectors come from ``dual_q0``.  ``axis_name``/``m_pad_global``
+    thread the shard_map context down (see ``sample_elementary_batch``)."""
     ks = jax.vmap(jax.random.split)(keys)                       # (N, 2, 2)
     probs = tree.lam / (tree.lam + 1.0)
     u_e = jax.vmap(
         lambda k: jax.random.uniform(k, probs.shape, dtype=probs.dtype)
     )(ks[:, 0])
     e_masks = u_e < probs[None, :]
+    q0 = None if dual_u is None else dual_q0(dual_u, tree.lam, e_masks)
     return sample_elementary_batch(tree, e_masks, ks[:, 1],
                                    axis_name=axis_name,
-                                   m_pad_global=m_pad_global)
+                                   m_pad_global=m_pad_global, q0=q0)
 
 
 # --------------------------------------------------------------------------
@@ -439,23 +612,35 @@ def shard_spectral(sp: SpectralNDPP, mesh: Mesh) -> SpectralNDPP:
 
 @functools.partial(jax.jit, static_argnames=("mesh",))
 def sample_proposal_dpp_batch_sharded(
-    tree: SampleTree, keys: jax.Array, mesh: Mesh
+    tree: SampleTree, keys: jax.Array, mesh: Mesh,
+    dual_u: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """``sample_proposal_dpp_batch`` with the tree sharded over the mesh
     "model" axis: deep-level descent and leaf scoring run on the shard that
     owns the nodes/rows, cross-shard combination is a psum of exact zeros —
     draws are bit-identical to the single-device sampler for any shard
-    count."""
+    count.  ``dual_u`` (replicated) switches to the dual-tree projectors
+    exactly as in the plain entry point."""
     specs = tree_shard_specs(tree, mesh)
     m_pad = tree.W.shape[0]
 
-    def inner(tree_loc, keys):
-        return sample_proposal_dpp_batch(
-            tree_loc, keys, axis_name="model", m_pad_global=m_pad)
+    if dual_u is None:
+        def inner(tree_loc, keys):
+            return sample_proposal_dpp_batch(
+                tree_loc, keys, axis_name="model", m_pad_global=m_pad)
 
-    f = shard_map(inner, mesh=mesh, in_specs=(specs, P(None)),
+        f = shard_map(inner, mesh=mesh, in_specs=(specs, P(None)),
+                      out_specs=(P(None), P(None)), check_rep=False)
+        return f(tree, keys)
+
+    def inner(tree_loc, keys, u):
+        return sample_proposal_dpp_batch(
+            tree_loc, keys, axis_name="model", m_pad_global=m_pad, dual_u=u)
+
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(specs, P(None), P(None, None)),
                   out_specs=(P(None), P(None)), check_rep=False)
-    return f(tree, keys)
+    return f(tree, keys, dual_u)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh",))

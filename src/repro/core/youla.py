@@ -73,3 +73,54 @@ def spectral_from_params(V: jax.Array, B: jax.Array, D: jax.Array):
     sig, y = youla_decompose(B, D)
     z = jnp.concatenate([V, y], axis=1)
     return SpectralNDPP(Z=z, sigma=sig)
+
+
+def youla_transform_np(B: np.ndarray, D: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """(sigma, T): the Youla change of basis as a K x K *right transform*,
+    ``Y = B @ T``.
+
+    Why a transform instead of the eigenbasis itself: Youla gives
+    ``B (D - Dᵀ) Bᵀ = (B T) Σ_skew (B T)ᵀ``, and when B has full column
+    rank that forces the K x K identity ``T Σ_skew Tᵀ = D - Dᵀ`` — which
+    holds for *any* later B.  So a dynamic catalog can freeze (sigma, T)
+    once and embed a new/updated item as ``z_j = [v_j, b_j @ T]``: the
+    spectral form ``Z X Zᵀ`` stays an exact factorization of the live
+    kernel under arbitrary row inserts/updates/deletes, as long as D is
+    unchanged (a D change is a real re-decomposition).  This is the
+    rank-structured dual-state update behind ``serve.catalog``.
+    """
+    B = np.asarray(B, dtype=np.float64)
+    D = np.asarray(D, dtype=np.float64)
+    K = B.shape[1]
+    C = (D - D.T) @ (B.T @ B)
+    eigvals, eigvecs = np.linalg.eig(C)
+    order = np.argsort(-np.imag(eigvals), kind="stable")
+    eigvals, eigvecs = eigvals[order], eigvecs[:, order]
+    half = K // 2
+    sig = np.imag(eigvals[:half]).copy()
+    t = np.zeros((K, K))
+    for j in range(half):
+        if sig[j] <= 1e-12:  # numerically rank-deficient pair
+            sig[j] = 0.0
+            u = np.real(eigvecs[:, j])
+            if np.linalg.norm(B @ u) < 1e-12:
+                u = np.zeros(K)
+                u[j % K] = 1.0
+            t[:, 2 * j] = u / max(np.linalg.norm(B @ u), 1e-30)
+            continue
+        v = eigvecs[:, j]
+        u1 = np.real(v) - np.imag(v)
+        u2 = np.real(v) + np.imag(v)
+        t[:, 2 * j] = u1 / max(np.linalg.norm(B @ u1), 1e-30)
+        t[:, 2 * j + 1] = u2 / max(np.linalg.norm(B @ u2), 1e-30)
+    return sig, t
+
+
+def spectral_from_transform(V: jax.Array, B: jax.Array, T: jax.Array,
+                            sigma: jax.Array):
+    """Spectral form via a frozen Youla transform: Z = [V, B T]."""
+    from .types import SpectralNDPP
+
+    z = jnp.concatenate([V, B @ jnp.asarray(T, B.dtype)], axis=1)
+    return SpectralNDPP(Z=z, sigma=jnp.asarray(sigma, B.dtype))

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the tree leaf-level outer-product reduction."""
+"""Pure-jnp oracles for the tree leaf-level outer-product reductions."""
 import jax
 import jax.numpy as jnp
 
@@ -8,4 +8,19 @@ def block_outer_sums_ref(W: jax.Array, block: int) -> jax.Array:
     m, r = W.shape
     assert m % block == 0
     wb = W.reshape(m // block, block, r).astype(jnp.float32)
+    return jnp.einsum("nbi,nbj->nij", wb, wb)
+
+
+def gathered_block_grams_ref(
+    W: jax.Array, blks: jax.Array, block: int
+) -> jax.Array:
+    """Grams of the ``len(blks)`` leaf blocks named by ``blks`` only.
+
+    W: (n*block, R), blks: (nb,) int block indices -> (nb, R, R).  Uses the
+    identical per-block contraction as ``block_outer_sums_ref`` so a
+    recomputed block is bit-equal to the same block of a full rebuild —
+    the incremental-update exactness invariant of ``core.tree.update_rows``.
+    """
+    rows = blks[:, None] * block + jnp.arange(block)[None, :]  # (nb, block)
+    wb = W[rows].astype(jnp.float32)
     return jnp.einsum("nbi,nbj->nij", wb, wb)

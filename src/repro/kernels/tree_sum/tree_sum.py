@@ -38,3 +38,40 @@ def block_outer_sums_pallas(
         out_shape=jax.ShapeDtypeStruct((n, r, r), jnp.float32),
         interpret=interpret,
     )(W)
+
+
+def _gathered_gram_kernel(blk_ref, w_ref, out_ref):
+    # blk_ref is the scalar-prefetch block-id vector; the index_map already
+    # used it to DMA exactly the touched (block, R) tile of W into VMEM, so
+    # the body is the same single MXU Gram as the full construction kernel —
+    # recomputed blocks are bit-equal to a from-scratch build.
+    z = w_ref[...]
+    zf = z.astype(jnp.float32)
+    out_ref[...] = jnp.dot(zf.T, zf, preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gathered_block_grams_pallas(
+    W: jax.Array, blks: jax.Array, *, block: int, interpret: bool = False
+) -> jax.Array:
+    """Grams of the leaf blocks named by ``blks`` (nb,) only: grid (nb,),
+    each step gathers its block of W by scalar-prefetched index and runs one
+    (R, block) x (block, R) MXU matmul — the batched-row-update hot path of
+    ``core.tree.update_rows`` (one launch per update batch)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    m, r = W.shape
+    assert m % block == 0
+    nb = blks.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, r), lambda i, blk_ref: (blk_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, r, r), lambda i, blk_ref: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gathered_gram_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, r, r), jnp.float32),
+        interpret=interpret,
+    )(blks.astype(jnp.int32), W)

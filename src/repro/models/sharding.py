@@ -143,6 +143,47 @@ def gather_rows(
     return jax.lax.psum(Z[loc] * own[..., None].astype(Z.dtype), axis_name)
 
 
+def scatter_rows(
+    Z: jax.Array, idx: jax.Array, rows: jax.Array,
+    axis_name: Optional[str] = None,
+) -> jax.Array:
+    """Write ``rows`` into ``Z[idx]`` on the shard owning each row.
+
+    The dual of ``gather_row``: with ``axis_name`` set, ``Z`` is the local
+    (M/S, R) block inside a ``shard_map`` and each update is routed to its
+    owner — non-owned updates are mapped to a positive out-of-bounds index
+    and dropped, so no cross-shard traffic and no masked read-modify-write
+    is needed.  ``idx`` must be unique.  Used by the dynamic catalog to
+    keep streaming row updates device-local (``serve.catalog``).
+    """
+    if axis_name is None:
+        return Z.at[idx].set(rows)
+    rps = Z.shape[0]
+    off = shard_offset(rps, axis_name)
+    own = (idx >= off) & (idx < off + rps)
+    return Z.at[jnp.where(own, idx - off, rps)].set(rows, mode="drop")
+
+
+def scatter_rows_sharded(
+    Z: jax.Array, idx: jax.Array, rows: jax.Array, mesh: Mesh
+) -> jax.Array:
+    """``scatter_rows`` over a mesh: keeps the (M, R) rows device-local
+    while every shard applies only the updates it owns.  Falls back to a
+    plain functional scatter when Z does not divide the mesh."""
+    from jax.experimental.shard_map import shard_map
+
+    spec = logical_to_spec(mesh, ("items", None), Z.shape)
+    if model_extent(mesh) == 1 or spec == P(None, None) or spec[0] is None:
+        return Z.at[idx].set(rows)
+
+    def inner(z_loc, idx, rows):
+        return scatter_rows(z_loc, idx, rows, axis_name="model")
+
+    f = shard_map(inner, mesh=mesh, in_specs=(spec, P(None), P(None, None)),
+                  out_specs=spec, check_rep=False)
+    return f(Z, idx, rows)
+
+
 def specs_for_params(mesh: Mesh, logical_tree, shape_tree):
     """Map a pytree of logical-axis tuples + shapes -> PartitionSpecs."""
     return jax.tree.map(

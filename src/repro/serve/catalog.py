@@ -1,0 +1,299 @@
+"""Versioned dynamic catalog: streaming item insert/update/delete.
+
+``Catalog`` owns the mutable lifecycle of an NDPP kernel's item set and
+keeps three pieces of state consistent:
+
+  * the **live spectral state** ``sp`` — Z rows embedded through a frozen
+    Youla transform (``youla.youla_transform_np``), so a row edit touches
+    exactly one row of Z while ``Z X Zᵀ`` remains an exact factorization
+    of the live kernel;
+  * the **live dual proposal** — tree + R x R dual eigens, maintained
+    incrementally in O(B (block + log M) R^2) per mutation batch
+    (``core.dynamic``), bit-equal to a from-scratch rebuild;
+  * the **proposal snapshot** served to samplers — usually the live
+    proposal, but deletes may defer the reinstall within a ``staleness``
+    budget: the snapshot then *dominates* the live kernel (the deleted
+    rows still carry proposal mass), acceptance rescoring against the
+    live kernel keeps draws exactly distributed, and only the rejection
+    rate degrades by det(L̂_snap + I)/det(L̂_live + I).
+
+Every mutation bumps the monotone ``version``; ``state()`` returns an
+immutable ``CatalogState`` — JAX arrays are functional, so an engine can
+pin the state a request was admitted under at zero copy cost and
+``SamplerEngine.swap_catalog`` can install a new version between ticks
+without draining in-flight slots.
+
+Insertions land in the zero-padded leaf slack (freed slots are reused
+lowest-first); when the slack runs out the capacity doubles and the tree
+is rebuilt from scratch (amortized O(1) rebuilds per item, like a
+growable array).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.dynamic import (
+    DualProposal,
+    build_dual_proposal,
+    expected_trials_dynamic,
+    sample_dynamic_many,
+    update_proposal,
+)
+from repro.core.rejection import RejectionSample
+from repro.core.types import SpectralNDPP
+from repro.core.youla import youla_transform_np
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogState:
+    """Immutable snapshot of a catalog version (what engines pin).
+
+    Attributes:
+      version: monotone catalog version (bumped by every mutation batch).
+      proposal_version: version the proposal snapshot was built at
+        (== ``version`` unless deletes were deferred).
+      sp: live spectral state — Z at capacity rows (dead/slack rows are
+        exact zeros), the acceptance target.
+      proposal: the ``DualProposal`` snapshot requests sample from.
+      m: live item count.
+    """
+
+    version: int
+    proposal_version: int
+    sp: SpectralNDPP
+    proposal: DualProposal
+    m: int
+
+    @property
+    def stale(self) -> bool:
+        return self.proposal_version != self.version
+
+    def expected_trials(self) -> float:
+        """E[#trials] of a draw under this state (degrades while stale)."""
+        return float(expected_trials_dynamic(self.proposal, self.sp))
+
+
+class Catalog:
+    """Mutable dynamic catalog over a low-rank NDPP kernel.
+
+    Args:
+      V, B: (M, K) item factors; D: (K, K).  The Youla transform of
+        (B, D) is computed once and frozen — items are embedded as
+        ``z = [v, b @ T]``, which keeps the spectral form exact under any
+        row inserts/updates/deletes (a *D* change requires a new Catalog).
+      block: tree leaf-block size.
+      capacity: minimum item capacity; rounded up to a power-of-two
+        number of leaf blocks (default: the natural padding of M).
+      staleness: how many consecutive *delete* batches may defer the
+        proposal-snapshot reinstall (0 = always fresh).  Deferred
+        snapshots stay valid — they dominate the live kernel — at the
+        cost of rejection rate; inserts and updates always reinstall
+        (a proposal that never proposes a new item cannot dominate it).
+      mesh: item-shard the catalog over the mesh "model" axis; mutation
+        batches are routed to the owning shard
+        (``models.sharding.scatter_rows_sharded`` /
+        ``tree.update_rows_sharded``) and sampling runs the sharded
+        rounds — all bit-identical to the unsharded catalog.
+    """
+
+    def __init__(self, V: jax.Array, B: jax.Array, D: jax.Array, *,
+                 block: int = 64, capacity: Optional[int] = None,
+                 staleness: int = 0, mesh: Optional[Mesh] = None):
+        V = jnp.asarray(V)
+        B = jnp.asarray(B)
+        m, k = V.shape
+        self.block = block
+        self.staleness = staleness
+        self.mesh = mesh
+        sig, t = youla_transform_np(np.asarray(B), np.asarray(D))
+        self._t = jnp.asarray(t, V.dtype)
+        self._sigma = jnp.asarray(sig, V.dtype)
+        cap = self._round_capacity(max(capacity or m, m))
+        z = jnp.zeros((cap, 2 * k), V.dtype)
+        z = z.at[:m].set(jnp.concatenate([V, B @ self._t], axis=1))
+        self._alive = np.zeros(cap, bool)
+        self._alive[:m] = True
+        self._version = 0
+        self._deferred = 0
+        self._install(z)
+
+    # ------------------------------------------------------------- plumbing
+    def _round_capacity(self, cap: int) -> int:
+        """Round up to a power-of-two leaf-block count (and at least one
+        block per shard when meshed, so the tree stays shardable)."""
+        n_blocks = 1 << max(0, math.ceil(
+            math.log2(max(1, -(-cap // self.block)))))
+        if self.mesh is not None:
+            from repro.models.sharding import model_extent
+
+            n_blocks = max(n_blocks, model_extent(self.mesh))
+        return n_blocks * self.block
+
+    def _install(self, z: jax.Array):
+        """Full (re)build: live spectral state + dual proposal from scratch
+        — catalog construction and capacity-doubling only."""
+        self._sp = SpectralNDPP(Z=z, sigma=self._sigma)
+        self._live_prop = build_dual_proposal(self._sp, self.block,
+                                              mesh=self.mesh)
+        self._sp = self._live_prop.sp      # mesh: the placed copy
+        self._snap = self._live_prop
+        self._snap_version = self._version
+        self._deferred = 0
+
+    def _apply(self, idx: np.ndarray, z_rows: jax.Array, *, install: bool):
+        """One mutation batch: scatter the live Z rows, advance the live
+        proposal incrementally, bump the version, and reinstall the
+        snapshot unless a (valid) deferral was requested and budgeted."""
+        idx_j = jnp.asarray(idx, jnp.int32)
+        if self.mesh is None:
+            z = self._sp.Z.at[idx_j].set(z_rows)
+        else:
+            from repro.models.sharding import scatter_rows_sharded
+
+            z = scatter_rows_sharded(self._sp.Z, idx_j, z_rows, self.mesh)
+        self._sp = SpectralNDPP(Z=z, sigma=self._sigma)
+        self._live_prop = update_proposal(self._live_prop, idx_j, z_rows,
+                                          self._sp, mesh=self.mesh)
+        self._version += 1
+        if not install and self._deferred < self.staleness:
+            self._deferred += 1
+        else:
+            self._snap = self._live_prop
+            self._snap_version = self._version
+            self._deferred = 0
+
+    def _embed(self, v_rows, b_rows) -> jax.Array:
+        v_rows = jnp.atleast_2d(jnp.asarray(v_rows, self._sp.Z.dtype))
+        b_rows = jnp.atleast_2d(jnp.asarray(b_rows, self._sp.Z.dtype))
+        return jnp.concatenate([v_rows, b_rows @ self._t], axis=1)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def capacity(self) -> int:
+        return int(self._sp.Z.shape[0])
+
+    @property
+    def m(self) -> int:
+        return int(self._alive.sum())
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def alive_ids(self) -> np.ndarray:
+        """Item ids (row indices) currently live, ascending."""
+        return np.flatnonzero(self._alive)
+
+    def state(self) -> CatalogState:
+        """Immutable snapshot for engines / samplers (zero-copy)."""
+        return CatalogState(version=self._version,
+                            proposal_version=self._snap_version,
+                            sp=self._sp, proposal=self._snap, m=self.m)
+
+    # ------------------------------------------------------------- mutations
+    def insert_items(self, v_rows, b_rows) -> np.ndarray:
+        """Insert items with factor rows ``v_rows``/``b_rows`` (B, K).
+
+        Returns the assigned item ids (row indices).  Lands in freed /
+        slack slots (lowest first); overflowing the capacity triggers a
+        doubling rebuild.  Always reinstalls the proposal snapshot — a
+        snapshot predating an insert cannot dominate the live kernel.
+        """
+        z_rows = self._embed(v_rows, b_rows)
+        n_new = z_rows.shape[0]
+        free = np.flatnonzero(~self._alive)
+        if free.size < n_new:
+            self._grow(self.m + n_new)
+            free = np.flatnonzero(~self._alive)
+        ids = free[:n_new]
+        self._alive[ids] = True
+        self._apply(ids, z_rows, install=True)
+        return ids
+
+    def update_items(self, ids: Sequence[int], v_rows, b_rows, *,
+                     defer: bool = False):
+        """Replace the factor rows of existing items ``ids``.
+
+        ``defer=True`` skips the proposal-snapshot reinstall (within the
+        ``staleness`` budget).  Only valid — i.e. only keeps draws exact —
+        when the update *shrinks* each row in the proposal (hat) norm
+        (``new = c * old`` with ``|c| <= 1``), so the stale snapshot still
+        dominates the live kernel; deletes always qualify, general updates
+        do not.  The caller owns that judgement, which is why the flag is
+        opt-in and off by default.
+        """
+        ids = np.asarray(ids, np.int64)
+        if np.unique(ids).size != ids.size:
+            # every layer below (update_rows / tree_update / scatter_rows)
+            # resolves duplicate row writes in unspecified order — two
+            # different rows for one id would silently desync Z from the tree
+            raise ValueError(f"duplicate ids in update batch: {ids.tolist()}")
+        if not self._alive[ids].all():
+            raise ValueError(f"update of dead/unknown items: "
+                             f"{ids[~self._alive[ids]].tolist()}")
+        self._apply(ids, self._embed(v_rows, b_rows), install=not defer)
+
+    def delete_items(self, ids: Sequence[int]):
+        """Delist items: live rows become exact zeros immediately (the
+        acceptance test — and the MCMC add-ratio — then rejects them with
+        probability one), and the slot returns to the free list.  The
+        proposal-snapshot reinstall is deferred within the ``staleness``
+        budget: a delete-stale snapshot always dominates the live kernel,
+        so draws stay exact while only the rejection rate degrades."""
+        ids = np.unique(np.asarray(ids, np.int64))  # dedup: zeros are zeros
+        if not self._alive[ids].all():
+            raise ValueError(f"delete of dead/unknown items: "
+                             f"{ids[~self._alive[ids]].tolist()}")
+        self._alive[ids] = False
+        z_rows = jnp.zeros((ids.size, self._sp.Z.shape[1]),
+                           self._sp.Z.dtype)
+        self._apply(ids, z_rows, install=False)
+
+    def refresh(self):
+        """Force the proposal snapshot back to the live proposal (ends any
+        deferral; O(1) — the live proposal is always maintained)."""
+        self._snap = self._live_prop
+        self._snap_version = self._version
+        self._deferred = 0
+
+    def _grow(self, need: int):
+        """Doubling rebuild: capacity doubles until ``need`` fits, Z is
+        re-padded, and the tree/dual state is rebuilt from scratch (the
+        only O(M) path in the lifecycle; amortized O(1) per insert)."""
+        cap = self.capacity
+        while cap < need:
+            cap *= 2
+        cap = self._round_capacity(cap)
+        z = jnp.zeros((cap, self._sp.Z.shape[1]), self._sp.Z.dtype)
+        z = z.at[:self.capacity].set(
+            jax.device_get(self._sp.Z))  # gather off any mesh first
+        alive = np.zeros(cap, bool)
+        alive[:self._alive.size] = self._alive
+        self._alive = alive
+        self._version += 1
+        self._install(z)
+
+    # -------------------------------------------------------------- sampling
+    def sample_many(self, key: jax.Array, n: int, *,
+                    n_spec: Optional[int] = None, max_trials: int = 1000,
+                    **kw) -> RejectionSample:
+        """Draw ``n`` exact samples from the *live* kernel through the
+        current proposal snapshot (see ``core.dynamic.sample_dynamic_many``)."""
+        st = self.state()
+        return sample_dynamic_many(st.proposal, st.sp, key, n,
+                                   n_spec=n_spec, max_trials=max_trials,
+                                   mesh=self.mesh, **kw)
+
+
+CatalogLike = Union[Catalog, CatalogState]
+
+
+def as_state(cat: CatalogLike) -> CatalogState:
+    return cat.state() if isinstance(cat, Catalog) else cat

@@ -19,6 +19,13 @@ the rejection rate is unbounded and the rejection backend can exhaust
 ``max_trials`` without accepting: MCMC per-step cost depends only on the
 kernel rank, never on the rejection rate.
 
+Both rejection flavors — a static preprocessed ``NDPPSampler`` or a
+dynamic ``serve.catalog.Catalog`` — share the pool: in catalog mode each
+request *pins* the ``CatalogState`` current at admission (proposal
+snapshot + live acceptance target), ``swap_catalog()`` installs a new
+version between ticks without draining in-flight slots, and each tick
+runs one speculative round per distinct pinned version still in flight.
+
 Exactness: proposal t of request ``rid`` is always generated from
 ``fold_in(request_key, t)`` (rejection), and MH step t of a chain from
 ``fold_in(chain_key, t)`` (MCMC), so the draw a request receives is
@@ -40,6 +47,11 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import mcmc as mcmc_core
+from repro.core.dynamic import (
+    _spec_round_dual,
+    _spec_round_dual_sharded,
+    auto_n_spec_dynamic,
+)
 from repro.core.rejection import (
     NDPPSampler,
     _fanout_keys,
@@ -50,6 +62,7 @@ from repro.core.rejection import (
 )
 from repro.core.tree import shard_spectral
 from repro.core.types import SpectralNDPP
+from repro.serve.catalog import Catalog, CatalogState, as_state
 
 
 @dataclasses.dataclass
@@ -102,8 +115,10 @@ class SamplerEngine:
     tree is needed).
 
     Args:
-      sampler: ``NDPPSampler`` (required for rejection) or, for MCMC, a
-        bare ``SpectralNDPP``.
+      sampler: ``NDPPSampler`` (static rejection), a ``Catalog`` /
+        ``CatalogState`` (dynamic-catalog mode: requests pin the catalog
+        version they were admitted under and ``swap_catalog`` installs new
+        versions with zero drain), or, for MCMC, a bare ``SpectralNDPP``.
       n_slots: pool size — concurrent in-flight requests per tick.
       n_spec: rejection speculation depth per slot per tick (default
         auto-sizes to ~E[#trials]).
@@ -125,7 +140,8 @@ class SamplerEngine:
         Requires M divisible by the mesh "model" extent.
     """
 
-    def __init__(self, sampler: Union[NDPPSampler, SpectralNDPP],
+    def __init__(self, sampler: Union[NDPPSampler, SpectralNDPP, Catalog,
+                                      CatalogState],
                  n_slots: int = 8, n_spec: Optional[int] = None,
                  backend: str = "rejection", mcmc_burn_in: int = 256,
                  mcmc_thin: int = 16, mcmc_steps_per_tick: Optional[int] = None,
@@ -136,16 +152,31 @@ class SamplerEngine:
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
         self.mesh = mesh
-        if isinstance(sampler, NDPPSampler):
+        self._cat: Optional[CatalogState] = None
+        if isinstance(sampler, (Catalog, CatalogState)):
+            # dynamic-catalog mode: the catalog owns preprocessing, mesh
+            # placement, and versioning; each request pins the CatalogState
+            # current at admission, so swap_catalog never drains the pool
+            if isinstance(sampler, Catalog):
+                if mesh is not None and sampler.mesh is not mesh:
+                    raise ValueError(
+                        "pass the catalog's own mesh (or none) — the "
+                        "catalog arrays are already placed on it")
+                self.mesh = mesh = sampler.mesh
+            self._cat = as_state(sampler)
+            self.sampler = None
+            self.sp = self._cat.sp
+        elif isinstance(sampler, NDPPSampler):
             self.sampler: Optional[NDPPSampler] = sampler
             self.sp = sampler.sp
         else:
             if backend == "rejection":
                 raise ValueError(
-                    "backend='rejection' needs a preprocessed NDPPSampler")
+                    "backend='rejection' needs a preprocessed NDPPSampler "
+                    "or a Catalog/CatalogState")
             self.sampler = None
             self.sp = sampler
-        if mesh is not None:
+        if mesh is not None and self._cat is None:
             from repro.models.sharding import model_extent
 
             s = model_extent(mesh)
@@ -172,7 +203,14 @@ class SamplerEngine:
         if backend == "rejection":
             # default the speculation depth to ~E[#trials] so most requests
             # retire after a single tick
-            self.n_spec = auto_n_spec(sampler) if n_spec is None else n_spec
+            self._auto_spec = n_spec is None
+            if n_spec is not None:
+                self.n_spec = n_spec
+            elif self._cat is not None:
+                self.n_spec = auto_n_spec_dynamic(self._cat.proposal,
+                                                  self._cat.sp)
+            else:
+                self.n_spec = auto_n_spec(sampler)
         else:
             self.mcmc_burn_in = mcmc_burn_in
             self.mcmc_thin = mcmc_thin
@@ -189,12 +227,44 @@ class SamplerEngine:
         self.slot_req: List[Optional[SampleRequest]] = [None] * n_slots
         self.slot_key = np.zeros((n_slots, 2), np.uint32)
         self.slot_trials = np.zeros(n_slots, np.int64)
+        # catalog mode: the CatalogState each in-flight request samples
+        # from — pinned at admission, released at retire
+        self.slot_pin: List[Optional[CatalogState]] = [None] * n_slots
         self.finished: Dict[int, SampleResult] = {}
         self.ticks = 0
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: SampleRequest):
         self.queue.append(req)
+
+    def swap_catalog(self, cat: Union[Catalog, CatalogState]):
+        """Install a new catalog version between ticks — zero drain.
+
+        Rejection backend: in-flight slots keep sampling from the
+        ``CatalogState`` they pinned at admission (proposal *and*
+        acceptance target — a request's draw is exactly distributed for
+        the version it was admitted under, bit-identical to an engine
+        that never swapped); only newly admitted requests see the new
+        version.  Old versions are garbage once their last slot retires.
+
+        MCMC backend: chains track the *live* kernel, so the pool
+        switches target immediately — every cached inverse is re-anchored
+        against the new rows (``mcmc.reanchor``) and subset items deleted
+        by the new version are dropped; the chains' step counters (and so
+        their key schedules) are untouched.
+        """
+        st = as_state(cat)
+        if self.backend == "rejection" and self._cat is None:
+            raise ValueError("swap_catalog on a rejection engine requires "
+                             "it to have been built from a Catalog")
+        self._cat = st
+        self.sp = st.sp
+        if self.backend == "mcmc":
+            self._states = mcmc_core.reanchor(st.sp, self._states)
+        elif self._auto_spec:
+            # keep the speculation depth tuned to the *current* catalog's
+            # E[#trials] — a swap can move the rate by an order of magnitude
+            self.n_spec = auto_n_spec_dynamic(st.proposal, st.sp)
 
     def _init_chain_state(self, seed: int) -> mcmc_core.MCMCState:
         """Deterministic per-request chain start (schedule-independent):
@@ -213,6 +283,7 @@ class SamplerEngine:
                 self.slot_req[slot] = req
                 self.slot_key[slot] = np.asarray(jax.random.PRNGKey(req.seed))
                 self.slot_trials[slot] = 0
+                self.slot_pin[slot] = self._cat
                 if self.backend == "mcmc":
                     st = self._init_chain_state(req.seed)
                     self._states = jax.tree_util.tree_map(
@@ -223,6 +294,7 @@ class SamplerEngine:
         req.result = result
         self.finished[req.rid] = result
         self.slot_req[slot] = None
+        self.slot_pin[slot] = None
 
     # ----------------------------------------------------------------- core
     def step(self) -> bool:
@@ -272,7 +344,15 @@ class SamplerEngine:
         return True
 
     def _step_rejection(self) -> bool:
-        """One speculative rejection round for the whole pool."""
+        """One speculative rejection round for the whole pool.
+
+        Catalog mode runs one round per *distinct pinned catalog version*
+        among the occupied slots (at most the number of swaps in flight,
+        normally 1): every round uses the full fixed-shape pool fan-out,
+        and a slot harvests only from its own version's round — so a
+        request's proposals and acceptance tests always come from the
+        arrays it was admitted under.
+        """
         self._admit()
         if all(r is None for r in self.slot_req):
             return False
@@ -282,17 +362,41 @@ class SamplerEngine:
             jnp.asarray(self.slot_trials, jnp.uint32),
             jnp.arange(self.n_spec, dtype=jnp.uint32),
         )
-        items, mask, accept = (
-            _spec_round(self.sampler, keys) if self.mesh is None
-            else _spec_round_sharded(self.sampler, keys, self.mesh))
+        if self._cat is None:
+            slot_groups = [(None, [s for s in range(self.n_slots)
+                                   if self.slot_req[s] is not None])]
+        else:
+            # group by pinned-state identity (not just version: states from
+            # different Catalog objects could share a version number)
+            by_pin: Dict[int, List[int]] = {}
+            for s in range(self.n_slots):
+                if self.slot_req[s] is not None:
+                    by_pin.setdefault(id(self.slot_pin[s]), []).append(s)
+            slot_groups = sorted(
+                ((self.slot_pin[ss[0]], ss) for ss in by_pin.values()),
+                key=lambda g: g[0].version)
+        for pin, slots in slot_groups:
+            if pin is None:
+                items, mask, accept = (
+                    _spec_round(self.sampler, keys) if self.mesh is None
+                    else _spec_round_sharded(self.sampler, keys, self.mesh))
+            else:
+                items, mask, accept = (
+                    _spec_round_dual(pin.proposal, pin.sp, keys)
+                    if self.mesh is None
+                    else _spec_round_dual_sharded(pin.proposal, pin.sp,
+                                                  keys, self.mesh))
+            self._harvest(slots, items, mask, accept)
+        return True
+
+    def _harvest(self, slots: List[int], items, mask, accept):
+        """Retire-or-advance the given slots from one round's outputs."""
         r = items.shape[-1]
         acc = np.asarray(accept).reshape(self.n_slots, self.n_spec)
         items_h = np.asarray(items).reshape(self.n_slots, self.n_spec, r)
         mask_h = np.asarray(mask).reshape(self.n_slots, self.n_spec, r)
-        for slot in range(self.n_slots):
+        for slot in slots:
             req = self.slot_req[slot]
-            if req is None:
-                continue
             # only proposals inside the request's max_trials budget count,
             # so the engine matches sample_batched_many's trial accounting
             # even when the budget is not a multiple of n_spec
@@ -314,7 +418,6 @@ class SamplerEngine:
                         mask=mask_h[slot, usable - 1],
                         trials=int(self.slot_trials[slot]), accepted=False,
                     ))
-        return True
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, SampleResult]:
         """Drain the queue; returns {rid: SampleResult} for every retired

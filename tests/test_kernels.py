@@ -13,7 +13,10 @@ from repro.kernels.mcmc_score.ref import score_all_ref
 from repro.kernels.ssd import ops as sops
 from repro.kernels.ssd.ref import ssd_ref
 from repro.kernels.tree_sum import ops as tops
-from repro.kernels.tree_sum.ref import block_outer_sums_ref
+from repro.kernels.tree_sum.ref import (
+    block_outer_sums_ref,
+    gathered_block_grams_ref,
+)
 
 
 @pytest.mark.parametrize("m,r", [(64, 8), (100, 40), (512, 200), (33, 7), (8, 128)])
@@ -62,6 +65,23 @@ def test_tree_sum(rng, m, blk, r):
     ref = block_outer_sums_ref(w, blk)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,blk,r,nb", [(64, 8, 16, 3), (256, 64, 40, 5),
+                                        (128, 32, 130, 2), (64, 8, 8, 1)])
+def test_gathered_block_grams(rng, m, blk, r, nb):
+    """Scalar-prefetch gathered-Gram kernel (the tree_update hot path) vs
+    the einsum oracle, including repeated block ids (idempotent writes)."""
+    w = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    blks = jnp.asarray(rng.integers(0, m // blk, size=nb), jnp.int32)
+    out = tops.gathered_block_grams(w, blks, blk, force_interpret=True)
+    ref = gathered_block_grams_ref(w, blks, blk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+    # the gathered Grams must agree with the same blocks of a full build
+    full = block_outer_sums_ref(w, blk)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(full[blks]),
+                               rtol=0, atol=0)
 
 
 @pytest.mark.parametrize(
