@@ -83,7 +83,9 @@ from .learning import (  # noqa: F401
 from .map_inference import (  # noqa: F401
     next_item_scores,
     greedy_map,
+    conditional_sample,
     mean_percentile_rank,
+    mpr_frequency_baseline,
 )
 from .kdpp import (  # noqa: F401
     elementary_symmetric,

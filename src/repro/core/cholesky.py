@@ -63,7 +63,10 @@ def sample_cholesky_inner(
         qz = q @ z_i
         zq = z_i @ q
         p = jnp.dot(z_i, qz)
-        take = u <= p
+        # strict <: uniform() includes 0.0 exactly, and a zero-marginal
+        # item (e.g. a conditioned-out row zeroed by conditional_sample)
+        # must NEVER be taken — `u <= p` would take it w.p. ~2^-24
+        take = u < p
         denom = jnp.where(take, jnp.maximum(p, _EPS), jnp.minimum(p - 1.0, -_EPS))
         q = q - jnp.outer(qz, zq) / denom
         return q, take
@@ -109,7 +112,7 @@ def sample_cholesky_blocked(
             qz = qc @ z_i
             zq = z_i @ qc
             p = jnp.dot(z_i, qz)
-            take = u <= p
+            take = u < p  # strict: padded zero rows must never be taken
             denom = jnp.where(
                 take, jnp.maximum(p, _EPS), jnp.minimum(p - 1.0, -_EPS)
             )

@@ -47,9 +47,12 @@ def _basket_logdets(
     )
     k_pad = ly.shape[-1]
     eye = jnp.eye(k_pad, dtype=ly.dtype)
-    pad_fix = jnp.einsum("ni,nj->nij", 1.0 - baskets.mask, 1.0 - baskets.mask) * 0.0
+    # padding rows get diag exactly 1 (factor 1 in the det); the eps jitter
+    # goes on REAL rows only — adding it to padding too would bias each
+    # basket's log-likelihood by (k_max - |Y|) log(1 + eps), a size-dependent
+    # offset that the variable-basket-size exactness tests catch
     diag_fill = (1.0 - baskets.mask)[..., None] * eye[None]
-    ly = ly + diag_fill + _DET_EPS * eye[None] + pad_fix
+    ly = ly + diag_fill + _DET_EPS * baskets.mask[..., None] * eye[None]
     sign, logdet = jnp.linalg.slogdet(ly)
     # det should be positive for PSD-style kernels; clamp invalid to -inf-ish
     return jnp.where(sign > 0, logdet, -1e9)
@@ -113,7 +116,10 @@ def symmetric_dpp_loss(
     ly = jnp.einsum("nik,njk->nij", vy, vy)
     k_pad = ly.shape[-1]
     eye = jnp.eye(k_pad, dtype=ly.dtype)
-    ly = ly + (1.0 - baskets.mask)[..., None] * eye[None] + _DET_EPS * eye[None]
+    # same padding convention as _basket_logdets: unit diag on padding, eps
+    # jitter on real rows only
+    ly = ly + (1.0 - baskets.mask)[..., None] * eye[None] \
+        + _DET_EPS * baskets.mask[..., None] * eye[None]
     sign, logdet = jnp.linalg.slogdet(ly)
     ll = jnp.where(sign > 0, logdet, -1e9)
     g = V.T @ V

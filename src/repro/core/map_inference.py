@@ -16,6 +16,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .bilinear import bilinear_scores, conditional_inner_matrix
 from .types import NDPPParams
@@ -30,6 +31,14 @@ def _zx(params: NDPPParams) -> Tuple[jax.Array, jax.Array]:
     return z, x
 
 
+def _taken_mask(observed: jax.Array, obs_mask: jax.Array, m: int) -> jax.Array:
+    """(M,) bool marking the observed items of a padded set.  Padding slots
+    point out of range and are dropped (mode="drop") so they cannot clobber
+    a legitimately-observed item M-1."""
+    idx = jnp.where(obs_mask.astype(bool), observed, m)
+    return jnp.zeros((m,), bool).at[idx].set(True, mode="drop")
+
+
 def next_item_scores(
     params: NDPPParams, observed: jax.Array, obs_mask: jax.Array
 ) -> jax.Array:
@@ -38,11 +47,8 @@ def next_item_scores(
     z_obs = z[jnp.maximum(observed, 0)]
     w = conditional_inner_matrix(z_obs, obs_mask.astype(z.dtype), x)
     scores = bilinear_scores(z, w)
-    # already-observed items must not be re-suggested; padding slots point
-    # out of range and are dropped (mode="drop") so they cannot clobber a
-    # legitimately-observed item M-1
-    idx = jnp.where(obs_mask.astype(bool), observed, params.M)
-    taken = jnp.zeros((params.M,), bool).at[idx].set(True, mode="drop")
+    # already-observed items must not be re-suggested
+    taken = _taken_mask(observed, obs_mask, params.M)
     return jnp.where(taken, -jnp.inf, scores)
 
 
@@ -57,9 +63,8 @@ def greedy_map(params: NDPPParams, k: int) -> jax.Array:
         z_obs = z[jnp.maximum(observed, 0)]
         w = conditional_inner_matrix(z_obs, mask.astype(z.dtype), x)
         scores = bilinear_scores(z, w)
-        idx = jnp.where(mask.astype(bool), observed, params.M)
-        taken = jnp.zeros((params.M,), bool).at[idx].set(True, mode="drop")
-        scores = jnp.where(taken, -jnp.inf, scores)
+        scores = jnp.where(_taken_mask(observed, mask, params.M),
+                           -jnp.inf, scores)
         j = jnp.argmax(scores)
         observed = observed.at[t].set(j)
         mask = mask.at[t].set(True)
@@ -70,24 +75,100 @@ def greedy_map(params: NDPPParams, k: int) -> jax.Array:
     return items
 
 
-def mean_percentile_rank(
-    params: NDPPParams, baskets: jax.Array, mask: jax.Array, key: jax.Array
-) -> jax.Array:
-    """MPR (Appendix B.1): hold one random item out of each test basket,
-    rank it among all items not in the remainder by conditional score."""
+def _held_out_percentiles(score_fn, baskets: jax.Array, mask: jax.Array,
+                          key: jax.Array):
+    """Shared hold-one-out protocol (Appendix B.1): drop one random item
+    from each basket, score every item given the remainder with
+    ``score_fn(basket, rest_mask) -> (M,)`` (-inf marks invalid/observed
+    items), and return (percentiles, usable): the held item's percentile
+    among valid items, and a bool marking baskets that had an item to
+    hold out (empty baskets carry no held-out signal and must not enter
+    the mean).
+
+    Model and baseline MPRs evaluated with the SAME ``key`` hold out the
+    SAME items, so their comparison is paired, not two noisy protocols.
+    """
 
     def one(basket, m, k):
         n_items = jnp.sum(m.astype(jnp.int32))
         pick = jax.random.randint(k, (), 0, jnp.maximum(n_items, 1))
         held = basket[pick]
         m_rest = m.at[pick].set(False)
-        scores = next_item_scores(params, basket, m_rest)
+        scores = score_fn(basket, m_rest)
         p_held = scores[held]
         valid = jnp.isfinite(scores)
         n_valid = jnp.sum(valid.astype(jnp.int32))
         rank = jnp.sum((scores <= p_held) & valid)
-        return 100.0 * rank / jnp.maximum(n_valid, 1)
+        return 100.0 * rank / jnp.maximum(n_valid, 1), n_items > 0
 
     keys = jax.random.split(key, baskets.shape[0])
-    prs = jax.vmap(one)(baskets, mask, keys)
-    return jnp.mean(prs)
+    return jax.vmap(one)(baskets, mask, keys)
+
+
+def _masked_mean(prs: jax.Array, usable: jax.Array) -> jax.Array:
+    w = usable.astype(prs.dtype)
+    return jnp.sum(prs * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def mean_percentile_rank(
+    params: NDPPParams, baskets: jax.Array, mask: jax.Array, key: jax.Array
+) -> jax.Array:
+    """MPR (Appendix B.1): hold one random item out of each test basket,
+    rank it among all items not in the remainder by conditional score.
+    Empty baskets (nothing to hold out) are excluded from the mean."""
+    prs, usable = _held_out_percentiles(
+        lambda b, m: next_item_scores(params, b, m), baskets, mask, key)
+    return _masked_mean(prs, usable)
+
+
+def mpr_frequency_baseline(
+    item_freq: jax.Array, baskets: jax.Array, mask: jax.Array, key: jax.Array
+) -> jax.Array:
+    """Item-popularity MPR baseline under the identical hold-one-out
+    protocol: the held item is ranked by global training frequency (ties
+    broken by item id so the ranking is a strict order), observed items
+    excluded.  A learned kernel that cannot beat this is not using basket
+    context at all."""
+    m_total = item_freq.shape[0]
+    # strict (freq, id)-lexicographic ranking computed on host in exact
+    # integer arithmetic: a float combination like freq * M + id stops
+    # being representable (and so a strict order) once counts * M pass
+    # the f32/f64 mantissa — dense ranks 0..M-1 are exact for any scale
+    freq_h = np.asarray(item_freq, np.float64)
+    order = np.lexsort((np.arange(m_total), freq_h))  # freq major, id minor
+    rank = np.empty(m_total, np.int64)
+    rank[order] = np.arange(m_total)
+    base = jnp.asarray(rank, jnp.float32)
+
+    def score(basket, rest_mask):
+        taken = _taken_mask(basket, rest_mask, m_total)
+        return jnp.where(taken, -jnp.inf, base)
+
+    prs, usable = _held_out_percentiles(score, baskets, mask, key)
+    return _masked_mean(prs, usable)
+
+
+def conditional_sample(
+    params: NDPPParams, observed: jax.Array, obs_mask: jax.Array,
+    key: jax.Array,
+) -> jax.Array:
+    """Exact draw from the NDPP conditioned on ``observed ⊆ Y``; returns a
+    boolean (M,) inclusion mask over the *completion* items (observed items
+    are always False in the output).
+
+    The conditional of ``P(Y) ∝ det(L_Y)`` on containing J is itself an
+    NDPP over the complement with kernel ``L^J = Z W_J Z^T`` — the same
+    Schur-complement inner matrix W_J that scores next items — so the
+    completion is drawn with the linear-time Cholesky sampler on rows
+    with observed items zeroed out (a zero row has marginal 0 and is
+    never taken).
+    """
+    from .cholesky import marginal_inner, sample_cholesky_inner
+
+    z, x = _zx(params)
+    z_obs = z[jnp.maximum(observed, 0)]
+    w_j = conditional_inner_matrix(z_obs, obs_mask.astype(z.dtype), x)
+    z_c = jnp.where(_taken_mask(observed, obs_mask, params.M)[:, None],
+                    0.0, z)
+    w_marg = marginal_inner(z_c, w_j)
+    return sample_cholesky_inner(z_c, w_marg, key)

@@ -327,7 +327,10 @@ def sample_elementary(
         p = jnp.maximum(jnp.dot(w_j, qw), 1e-30)
         q_new = q - jnp.outer(qw, qw) / p
         q = jnp.where(active, q_new, q)
-        item = jnp.where(active, j, -1)
+        # pin int32: under JAX_ENABLE_X64 the index math promotes to int64,
+        # which breaks while_loop carries typed against the int32 init
+        # (core.rejection.sample) and splits dtypes from the batched path
+        item = jnp.where(active, j, -1).astype(jnp.int32)
         return q, item
 
     _, items = jax.lax.scan(step, q0, jnp.arange(r))
@@ -681,7 +684,7 @@ def sample_elementary_dense(
         p = jnp.maximum(jnp.dot(w_j, qw), 1e-30)
         q_new = q - jnp.outer(qw, qw) / p
         q = jnp.where(active, q_new, q)
-        return q, jnp.where(active, j, -1)
+        return q, jnp.where(active, j, -1).astype(jnp.int32)
 
     _, items = jax.lax.scan(step, q0, jnp.arange(r))
     return items, items >= 0

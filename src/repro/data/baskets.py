@@ -49,10 +49,35 @@ def planted_baskets(
     k_max: int = 8,
     seed: int = 0,
     n_topics: int = 32,
+    style: str = "topic",
+    **hothead_kwargs,
 ) -> Tuple[Baskets, Baskets]:
     """(train, test) padded baskets from a topic model with signed
     pairwise interactions (positively correlated item pairs exist, which
-    is what NDPPs can capture and symmetric DPPs cannot)."""
+    is what NDPPs can capture and symmetric DPPs cannot).
+
+    ``style="hothead"`` switches to the adversarial head/companion
+    generator (``hothead_baskets``) whose max-likelihood NDPP kernel has
+    an unboundedly large rejection rate — the regime where the ONDPP
+    constraint's rank-only trial bound actually bites.  Hothead baskets
+    are shaped by ``n_pairs``/``p_head``/``p_comp``/``p_noise`` (passed
+    through), not by ``k_max``/``n_topics`` — overriding those topic
+    parameters together with ``style="hothead"`` is an error, not a
+    silent no-op.
+    """
+    if style == "hothead":
+        if k_max != 8 or n_topics != 32:
+            raise ValueError(
+                "k_max/n_topics configure the topic generator and do not "
+                "apply to style='hothead' (its width is 2*n_pairs + 2) — "
+                "pass n_pairs/p_head/p_comp/p_noise instead")
+        return hothead_baskets(m, n_baskets, seed=seed, **hothead_kwargs)
+    if style != "topic":
+        raise ValueError(f"unknown planted-basket style {style!r}")
+    if hothead_kwargs:
+        raise ValueError(
+            f"unexpected arguments for style='topic': "
+            f"{sorted(hothead_kwargs)}")
     rng = np.random.default_rng(seed)
     topic_of = rng.integers(0, n_topics, size=m)
     # companion map: item i attracts item comp[i] (positive correlation)
@@ -81,6 +106,60 @@ def planted_baskets(
         chosen = chosen[:size]
         items[n, : len(chosen)] = chosen
         mask[n, : len(chosen)] = 1.0
+    n_train = int(0.9 * n_baskets)
+    tr = Baskets(jnp.asarray(items[:n_train]), jnp.asarray(mask[:n_train]))
+    te = Baskets(jnp.asarray(items[n_train:]), jnp.asarray(mask[n_train:]))
+    return tr, te
+
+
+def hothead_baskets(
+    m: int,
+    n_baskets: int,
+    n_pairs: int = 2,
+    p_head: float = 0.99,
+    p_comp: float = 0.15,
+    p_noise: float = 0.05,
+    seed: int = 0,
+) -> Tuple[Baskets, Baskets]:
+    """(train, test) baskets whose max-likelihood NDPP kernel has an
+    arbitrarily large rejection rate.
+
+    Items ``2j`` (j < n_pairs) are *hot heads* appearing in almost every
+    basket (marginal ``p_head``); item ``2j + 1`` is the head's companion
+    and occurs ONLY alongside it, with conditional probability ``p_comp``;
+    the remaining items are independent rare noise (``p_noise``).  Empty
+    baskets are kept — the empty-set rate is data.
+
+    Why this is the adversarial regime: the per-pair max-likelihood kernel
+    block is ``[[a, s], [-s, 0]]`` with ``a = P(head only)/P(neither)``
+    and ``s^2 = P(both)/P(neither)`` (the companion's own diagonal is 0
+    because it never appears alone, forcing the cross mass onto the skew
+    part), and its proposal ratio ``det(Lhat+I)/det(L+I) =
+    (1+a+s)(1+s)/(1+a+s^2) -> 1 + s`` as ``a`` grows.  With heads nearly
+    always present (``a`` huge) and companions attaching occasionally
+    (``s^2 = a p_comp/(1-p_comp-ish)`` still large), the learned
+    *unconstrained* NDPP's expected trials exceed the ONDPP rank bound
+    ``2^(K/2)`` — the separation benchmarks/sampling_time.py
+    ``--mode learned`` and the end-to-end pipeline test measure.
+    """
+    rng = np.random.default_rng(seed)
+    if m < 2 * n_pairs + 1:
+        raise ValueError(f"m={m} too small for {n_pairs} head/companion pairs")
+    k_max = 2 * n_pairs + 2
+    items = np.zeros((n_baskets, k_max), np.int32)
+    mask = np.zeros((n_baskets, k_max), np.float32)
+    for n in range(n_baskets):
+        row = []
+        for q in range(n_pairs):
+            if rng.random() < p_head:
+                row.append(2 * q)
+                if rng.random() < p_comp:
+                    row.append(2 * q + 1)
+        noise = np.flatnonzero(
+            rng.random(m - 2 * n_pairs) < p_noise) + 2 * n_pairs
+        row += list(noise[: k_max - len(row)])
+        items[n, : len(row)] = row
+        mask[n, : len(row)] = 1.0
     n_train = int(0.9 * n_baskets)
     tr = Baskets(jnp.asarray(items[:n_train]), jnp.asarray(mask[:n_train]))
     te = Baskets(jnp.asarray(items[n_train:]), jnp.asarray(mask[n_train:]))

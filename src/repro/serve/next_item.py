@@ -1,0 +1,135 @@
+"""Conditioned next-item serving over a learned NDPP kernel.
+
+The serving-side half of the learning pipeline (``train.ndpp`` is the
+other half): given a *partial basket* J, serve either
+
+  * **greedy scores** — ``det(L_{J u i}) / det(L_J)`` for every candidate
+    item at once (one Schur-complement inner matrix + one batched
+    bilinear form, ``core.map_inference.next_item_scores``), or
+  * **sampled completions** — exact draws from the NDPP conditioned on
+    ``J ⊆ Y`` (the conditional is itself an NDPP over the complement with
+    inner matrix W_J, sampled by the linear-time Cholesky sampler:
+    ``core.map_inference.conditional_sample``),
+
+plus the paper's MPR evaluation loop over held-out baskets against the
+item-popularity baseline (``mpr_frequency_baseline``).
+
+Accepts a learned ``ONDPPParams`` / ``NDPPParams`` directly — the same
+object ``train.ndpp.fit_*`` returns — so the learn → serve hop is one
+constructor call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.learning import Baskets, item_frequencies
+from repro.core.map_inference import (
+    conditional_sample,
+    mean_percentile_rank,
+    mpr_frequency_baseline,
+    next_item_scores,
+)
+from repro.core.types import NDPPParams, ONDPPParams
+
+
+@dataclasses.dataclass
+class MPRReport:
+    """Paired MPR evaluation (identical held-out draws for both rows)."""
+
+    model: float       # learned-kernel MPR (100 = held item always top)
+    frequency: float   # item-popularity baseline MPR
+    n_baskets: int
+
+    @property
+    def lift(self) -> float:
+        return self.model - self.frequency
+
+
+class NextItemServer:
+    """Basket-completion frontend over a learned NDPP kernel.
+
+    Args:
+      params: learned kernel — ``ONDPPParams`` (converted via
+        ``to_general``) or ``NDPPParams``.
+      k_pad: conditioning capacity; partial baskets are padded to this
+        many slots so every call hits one compiled shape.
+    """
+
+    def __init__(self, params: Union[NDPPParams, ONDPPParams],
+                 k_pad: int = 16):
+        if isinstance(params, ONDPPParams):
+            params = params.to_general()
+        self.params = params
+        self.k_pad = int(k_pad)
+        self._scores = jax.jit(
+            lambda obs, m: next_item_scores(self.params, obs, m))
+        self._complete = jax.jit(
+            lambda obs, m, key: conditional_sample(self.params, obs, m, key))
+
+    @property
+    def M(self) -> int:
+        return self.params.M
+
+    def _pad(self, basket: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+        basket = np.asarray(basket, np.int32).reshape(-1)
+        if basket.size > self.k_pad:
+            raise ValueError(
+                f"basket of {basket.size} items exceeds k_pad={self.k_pad}")
+        if basket.size and (basket.min() < 0 or basket.max() >= self.M):
+            raise ValueError(f"item ids must be in [0, {self.M})")
+        obs = np.full((self.k_pad,), -1, np.int32)
+        obs[: basket.size] = basket
+        m = np.zeros((self.k_pad,), np.float32)
+        m[: basket.size] = 1.0
+        return jnp.asarray(obs), jnp.asarray(m)
+
+    # ------------------------------------------------------------ greedy
+    def scores(self, basket: Sequence[int]) -> jax.Array:
+        """(M,) conditional gains ``det(L_{J u i})/det(L_J)``; observed
+        items score -inf."""
+        obs, m = self._pad(basket)
+        return self._scores(obs, m)
+
+    def top_k(self, basket: Sequence[int], k: int) -> np.ndarray:
+        """The k best next items by conditional gain, best first.  Returns
+        fewer than k items when the basket leaves fewer valid candidates
+        (observed items are never recommended back)."""
+        s = np.asarray(self.scores(basket))
+        order = np.argsort(-s, kind="stable")
+        return order[np.isfinite(s[order])][:k]
+
+    # ----------------------------------------------------------- sampled
+    def complete(self, basket: Sequence[int], key: jax.Array) -> np.ndarray:
+        """One exact draw of completion items from ``P(Y | J ⊆ Y)``;
+        returns the sampled item ids (J itself excluded)."""
+        obs, m = self._pad(basket)
+        taken = np.asarray(self._complete(obs, m, key))
+        return np.flatnonzero(taken)
+
+    def complete_many(self, basket: Sequence[int], key: jax.Array,
+                      n: int) -> list:
+        """``n`` i.i.d. completions (one vmapped Cholesky scan)."""
+        obs, m = self._pad(basket)
+        keys = jax.random.split(key, n)
+        taken = np.asarray(jax.vmap(
+            lambda k: self._complete(obs, m, k))(keys))
+        return [np.flatnonzero(t) for t in taken]
+
+    # -------------------------------------------------------------- eval
+    def evaluate_mpr(self, test: Baskets, key: jax.Array,
+                     train: Optional[Baskets] = None) -> MPRReport:
+        """Held-one-out MPR of the learned kernel vs the item-popularity
+        baseline on the same held-out draws.  ``train`` supplies the
+        frequency table (defaults to counting on ``test`` itself)."""
+        freq = item_frequencies(train if train is not None else test, self.M)
+        model = float(mean_percentile_rank(
+            self.params, test.items, test.mask, key))
+        base = float(mpr_frequency_baseline(
+            freq, test.items, test.mask, key))
+        return MPRReport(model=model, frequency=base,
+                         n_baskets=int(test.items.shape[0]))

@@ -1,0 +1,215 @@
+"""Exactness of conditioned next-item serving against brute force.
+
+On an M = 8 kernel everything is enumerable: ``next_item_scores`` must
+equal dense determinant ratios, ``conditional_sample`` must draw from the
+enumerated conditional ``P(Y | J ⊆ Y)`` (chi-square bar from
+``tests/_exactness.py``), ``mean_percentile_rank`` must equal a pure
+numpy reimplementation of the held-one-out protocol, and greedy MAP must
+maximize the true conditional gain at every step.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _exactness import assert_chi_square_close, histogram
+
+from repro.core import (
+    NDPPParams,
+    greedy_map,
+    mean_percentile_rank,
+    next_item_scores,
+)
+from repro.core.map_inference import conditional_sample, mpr_frequency_baseline
+from repro.core.types import dense_l
+from repro.serve.next_item import NextItemServer
+
+pytestmark = pytest.mark.exactness
+
+M, K = 8, 4
+
+
+@pytest.fixture(scope="module")
+def params():
+    # module-local RNG: keep the session rng fixture's sequence unchanged
+    rng = np.random.default_rng(808)
+    return NDPPParams(
+        jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32),
+        jnp.asarray(rng.normal(size=(M, K)) * 0.6, jnp.float32),
+        jnp.asarray(rng.normal(size=(K, K)), jnp.float32),
+    )
+
+
+@pytest.fixture(scope="module")
+def dense(params):
+    return np.asarray(dense_l(params), np.float64)
+
+
+def _pad(obs, k_pad=5):
+    obs = list(obs)
+    items = jnp.full((k_pad,), -1, jnp.int32).at[: len(obs)].set(
+        jnp.asarray(obs, jnp.int32))
+    mask = jnp.zeros((k_pad,)).at[: len(obs)].set(1.0)
+    return items, mask
+
+
+def test_next_item_scores_all_subsets(params, dense):
+    """Scores equal det(L_{J u i})/det(L_J) for EVERY observed set of size
+    1..3 (exhaustive, not sampled)."""
+    checked = 0
+    for j_size in (1, 2, 3):
+        for obs in itertools.combinations(range(M), j_size):
+            det_j = np.linalg.det(dense[np.ix_(obs, obs)])
+            if abs(det_j) < 1e-3:  # ill-conditioned ratios are not a fair bar
+                continue
+            items, mask = _pad(obs)
+            scores = np.asarray(next_item_scores(params, items, mask),
+                                np.float64)
+            for i in range(M):
+                if i in obs:
+                    assert np.isneginf(scores[i])
+                    continue
+                ji = list(obs) + [i]
+                expect = np.linalg.det(dense[np.ix_(ji, ji)]) / det_j
+                np.testing.assert_allclose(
+                    scores[i], expect, rtol=2e-2,
+                    atol=2e-2 * max(1.0, abs(expect)))
+                checked += 1
+    assert checked > 300  # the loop really ran
+
+
+def test_conditional_sample_matches_enumeration(params, dense):
+    """conditional_sample draws completions S with probability
+    ∝ det(L_{J u S}) — chi-square against the enumerated conditional."""
+    obs = (1, 6)
+    rest = [i for i in range(M) if i not in obs]
+    probs = {}
+    for r in range(len(rest) + 1):
+        for s in itertools.combinations(rest, r):
+            ji = list(obs) + list(s)
+            probs[s] = max(np.linalg.det(dense[np.ix_(ji, ji)]), 0.0)
+    norm = sum(probs.values())
+    probs = {s: p / norm for s, p in probs.items()}
+
+    items, mask = _pad(obs)
+    n = 4000
+    keys = jax.random.split(jax.random.PRNGKey(3), n)
+    taken = np.asarray(jax.jit(jax.vmap(
+        lambda k: conditional_sample(params, items, mask, k)))(keys))
+    # observed items are never re-emitted
+    assert not taken[:, list(obs)].any()
+    emp = histogram(np.broadcast_to(np.arange(M), taken.shape), taken)
+    assert set(emp) <= set(probs)
+    assert_chi_square_close(emp, probs, n)
+
+
+def test_mpr_matches_brute_force(params, dense):
+    """mean_percentile_rank == a numpy reimplementation (same held-out
+    items, dense f64 determinant ratios)."""
+    rng = np.random.default_rng(99)
+    n, k_max = 30, 4
+    items = np.zeros((n, k_max), np.int32)
+    mask = np.zeros((n, k_max), np.float32)
+    for i in range(n):
+        size = int(rng.integers(2, k_max + 1))
+        items[i, :size] = rng.choice(M, size=size, replace=False)
+        mask[i, :size] = 1.0
+
+    key = jax.random.PRNGKey(7)
+    got = float(mean_percentile_rank(params, jnp.asarray(items),
+                                     jnp.asarray(mask), key))
+
+    keys = jax.random.split(key, n)
+    prs = []
+    for i in range(n):
+        n_items = int(mask[i].sum())
+        pick = int(jax.random.randint(keys[i], (), 0, max(n_items, 1)))
+        held = int(items[i, pick])
+        rest = [int(items[i, q]) for q in range(n_items) if q != pick]
+        det_j = np.linalg.det(dense[np.ix_(rest, rest)]) if rest else 1.0
+        scores = np.full(M, -np.inf)
+        for c in range(M):
+            if c in rest:
+                continue
+            ji = rest + [c]
+            scores[c] = np.linalg.det(dense[np.ix_(ji, ji)]) / det_j
+        valid = np.isfinite(scores)
+        rank = int(np.sum((scores <= scores[held]) & valid))
+        prs.append(100.0 * rank / valid.sum())
+    expect = float(np.mean(prs))
+    # ranks are discrete: f32-vs-f64 jitter can only matter at a near-tie,
+    # which this fixed seed avoids — the means agree tightly
+    np.testing.assert_allclose(got, expect, atol=1e-3)
+
+
+def test_mpr_frequency_baseline_brute_force():
+    """The popularity baseline equals its numpy counterpart and is
+    perfect (100) when the held item is always the most popular valid
+    one."""
+    m = 6
+    freq = jnp.asarray([100.0, 5.0, 4.0, 3.0, 2.0, 1.0])
+    # every basket = {0, i}: whichever is held, it ranks top among valid
+    items = np.array([[0, i] + [0, 0] for i in range(1, m)], np.int32)[:, :4]
+    mask = np.zeros((m - 1, 4), np.float32)
+    mask[:, :2] = 1.0
+    key = jax.random.PRNGKey(11)
+    got = float(mpr_frequency_baseline(freq, jnp.asarray(items),
+                                       jnp.asarray(mask), key))
+    keys = jax.random.split(key, m - 1)
+    base = np.asarray(freq) * m + np.arange(m)
+    prs = []
+    for i in range(m - 1):
+        pick = int(jax.random.randint(keys[i], (), 0, 2))
+        held = int(items[i, pick])
+        rest = [int(items[i, 1 - pick])]
+        scores = base.copy()
+        scores[rest] = -np.inf
+        valid = np.isfinite(scores)
+        rank = int(np.sum((scores <= scores[held]) & valid))
+        prs.append(100.0 * rank / valid.sum())
+    np.testing.assert_allclose(got, float(np.mean(prs)), atol=1e-3)
+    # held item 0 (the most popular) always ranks 100; held item i ranks
+    # lower — both outcomes appear across the fixed-seed picks
+    assert got > 60.0
+
+
+def test_greedy_map_maximizes_gain_each_step(params, dense):
+    """Every greedy pick maximizes the TRUE dense conditional gain given
+    the prefix (validity of the whole trajectory, not just step one)."""
+    k = 4
+    picks = [int(i) for i in np.asarray(greedy_map(params, k))]
+    assert len(set(picks)) == k
+    prefix = []
+    for pick in picks:
+        det_j = np.linalg.det(dense[np.ix_(prefix, prefix)]) if prefix else 1.0
+        gains = np.full(M, -np.inf)
+        for c in range(M):
+            if c in prefix:
+                continue
+            ji = prefix + [c]
+            gains[c] = np.linalg.det(dense[np.ix_(ji, ji)]) / det_j
+        # f32 scores vs f64 gains: the pick must be within float slack of
+        # the best gain
+        assert gains[pick] >= gains.max() - 5e-3 * max(1.0, abs(gains.max()))
+        prefix.append(pick)
+
+
+def test_next_item_server_roundtrip(params):
+    """NextItemServer: top_k respects scores; completions never include
+    the conditioned basket and match conditional_sample's distribution
+    support."""
+    srv = NextItemServer(params, k_pad=5)
+    basket = [2, 5]
+    scores = np.asarray(srv.scores(basket))
+    assert np.isneginf(scores[basket]).all()
+    top = srv.top_k(basket, 3)
+    finite = np.where(np.isfinite(scores), scores, -np.inf)
+    assert list(top) == list(np.argsort(-finite, kind="stable")[:3])
+    comps = srv.complete_many(basket, jax.random.PRNGKey(0), 32)
+    for comp in comps:
+        assert not set(comp) & set(basket)
+        assert all(0 <= c < M for c in comp)
+    with pytest.raises(ValueError):
+        srv.scores([M + 3])

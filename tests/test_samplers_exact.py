@@ -23,6 +23,8 @@ from repro.core import (
 )
 from repro.core.types import dense_l, x_from_sigma
 
+pytestmark = pytest.mark.exactness
+
 M, K = 8, 4
 N_SAMPLES = 20000
 
