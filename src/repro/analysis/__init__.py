@@ -1,0 +1,30 @@
+"""``ndpplint`` — static correctness analyzer for the NDPP sampler stack.
+
+The repo's exactness guarantees (distribution-identical speculative
+rounds, tick-size-independent MCMC, bit-identical sharded draws,
+schedule-independent training) are conventions, not types: every consumed
+PRNG key is fold_in-derived, no Python control flow touches tracers, hot
+loops never silently recompile or round-trip to host, every Pallas kernel
+has an off-TPU oracle.  This package checks those conventions mechanically:
+
+  * ``python -m repro.analysis [paths]``  (or ``tools/ndpplint``) — the
+    AST-based static pass, five rule families (NDPP1xx–NDPP5xx), inline
+    ``# ndpplint: disable=...`` suppressions and a committed baseline of
+    justified exceptions (``tools/ndpplint_baseline.json``);
+  * ``repro.analysis.runtime`` — the runtime teeth: a compile-cache miss
+    counter for regression tests and the ``NDPP_STRICT=1`` transfer-guard/
+    tracer-leak pytest mode wired up in ``tests/conftest.py``.
+
+See ``docs/static_analysis.md`` for the rule catalog with rationale.
+"""
+from .common import Finding, Module, load_module
+from .registry import REGISTRY, all_rules, rule
+from .runner import Report, check_file, check_paths
+from .runtime import CompileCounter, enable_strict
+from .suppress import Baseline
+
+__all__ = [
+    "Baseline", "CompileCounter", "Finding", "Module", "REGISTRY",
+    "Report", "all_rules", "check_file", "check_paths", "enable_strict",
+    "load_module", "rule",
+]

@@ -1,0 +1,113 @@
+"""``ndpplint`` command line: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 = clean (or everything suppressed/baselined), 1 = findings,
+2 = usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from .registry import all_rules
+from .runner import Report, check_paths
+from .suppress import Baseline
+
+DEFAULT_BASELINE = Path("tools") / "ndpplint_baseline.json"
+
+
+def _find_baseline(explicit: Optional[str]) -> Optional[Path]:
+    if explicit:
+        p = Path(explicit)
+        if not p.exists():
+            raise FileNotFoundError(f"baseline file {p} does not exist")
+        return p
+    # default: tools/ndpplint_baseline.json under the repo root (walk up
+    # from cwd to the first directory holding pyproject.toml)
+    cur = Path.cwd()
+    for cand in [cur, *cur.parents]:
+        if (cand / "pyproject.toml").exists():
+            p = cand / DEFAULT_BASELINE
+            return p if p.exists() else None
+    return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="ndpplint",
+        description="Static correctness analyzer for the NDPP sampler "
+                    "stack: RNG-key discipline, tracer hygiene, "
+                    "recompilation/transfer hazards, Pallas kernel checks, "
+                    "determinism.")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON of accepted findings (default: "
+                         "tools/ndpplint_baseline.json at the repo root)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--include-fixtures", action="store_true",
+                    help="also analyze tests/lint_fixtures/ during "
+                         "directory walks (the committed violation corpus)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="list inline-disabled and baselined findings")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.id}  {r.name:<26} {r.rationale}")
+        return 0
+
+    try:
+        baseline = (Baseline.empty() if args.no_baseline
+                    else (Baseline.load(p) if (p := _find_baseline(args.baseline))
+                          else Baseline.empty()))
+    except (FileNotFoundError, ValueError, json.JSONDecodeError) as e:
+        print(f"ndpplint: {e}", file=sys.stderr)
+        return 2
+
+    paths = [Path(p) for p in args.paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"ndpplint: no such path(s): "
+              f"{', '.join(map(str, missing))}", file=sys.stderr)
+        return 2
+
+    rep = check_paths(paths, baseline=baseline,
+                      include_fixtures=args.include_fixtures)
+    return _emit(rep, args)
+
+
+def _emit(rep: Report, args) -> int:
+    if args.format == "json":
+        payload = {
+            "files_checked": rep.files_checked,
+            "findings": [vars(f) for f in rep.findings],
+            "suppressed": [{**vars(f), "why": why}
+                           for f, why in rep.suppressed],
+            "errors": rep.errors,
+        }
+        print(json.dumps(payload, indent=2))
+        return 0 if rep.clean else 1
+
+    for err in rep.errors:
+        print(f"ERROR {err}")
+    for f in rep.findings:
+        print(f.format())
+    if args.show_suppressed:
+        for f, why in rep.suppressed:
+            print(f"suppressed: {f.format()}  [{why}]")
+    n, s = len(rep.findings), len(rep.suppressed)
+    print(f"ndpplint: {rep.files_checked} files, {n} finding(s)"
+          + (f", {s} suppressed" if s else "")
+          + (f", {len(rep.errors)} error(s)" if rep.errors else ""))
+    return 0 if rep.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Plugin-style rule registry for ``ndpplint``.
+
+A rule is a function ``check(mod: Module) -> Iterable[Finding]`` registered
+with :func:`rule`.  Registration declares the rule id (``NDPP###``), a
+short name, the one-line rationale shown by ``--list-rules``, and the set
+of :data:`Module.kind` values the rule applies to.  Dropping a new module
+with ``@rule(...)`` definitions into ``repro/analysis/rules/`` (and
+importing it from ``rules/__init__``) is the whole extension surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List
+
+from .common import Finding, Module
+
+CheckFn = Callable[[Module], Iterable[Finding]]
+
+# kinds (see common.classify): fixture files are in scope for EVERY rule so
+# the analyzer's own violation corpus under tests/lint_fixtures/ works.
+DEFAULT_KINDS = ("src", "fixture")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    rationale: str
+    kinds: tuple
+    check: CheckFn
+
+
+REGISTRY: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, name: str, rationale: str,
+         kinds: tuple = DEFAULT_KINDS) -> Callable[[CheckFn], CheckFn]:
+    def deco(fn: CheckFn) -> CheckFn:
+        if rule_id in REGISTRY:
+            raise ValueError(f"duplicate rule id {rule_id}")
+        REGISTRY[rule_id] = Rule(id=rule_id, name=name, rationale=rationale,
+                                 kinds=tuple(kinds), check=fn)
+        return fn
+    return deco
+
+
+def rules_for(mod: Module) -> List[Rule]:
+    return [r for r in REGISTRY.values() if mod.kind in r.kinds or
+            mod.kind == "fixture"]
+
+
+def all_rules() -> List[Rule]:
+    return sorted(REGISTRY.values(), key=lambda r: r.id)

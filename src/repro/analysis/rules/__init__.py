@@ -1,0 +1,2 @@
+"""Rule modules register themselves on import (see ``registry.rule``)."""
+from . import determinism, pallas, recompile, rng, tracer  # noqa: F401

@@ -1,0 +1,117 @@
+"""Rule family 5 — determinism (NDPP5xx).
+
+Golden-file bit-equality, the sharded bit-identical-draws invariant, and
+chunking/restart-independent training all assume the only entropy source
+is an explicit PRNG key.  Wall-clock reads and ambient RNG state break
+replays silently:
+
+  NDPP501  wall-clock (``time.*``/``datetime.now``) in sampling paths
+  NDPP502  the stdlib ``random`` module anywhere in library code
+  NDPP503  unseeded NumPy randomness (global ``np.random.*`` calls or
+           ``default_rng()`` with no seed) outside tests
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..common import Finding, Module
+from ..registry import rule
+
+_CLOCKS = {
+    "time.time", "time.time_ns", "time.perf_counter", "time.monotonic",
+    "time.process_time", "datetime.datetime.now", "datetime.datetime.today",
+    "datetime.datetime.utcnow", "datetime.date.today",
+}
+
+_SAMPLING_SUBPATHS = ("/core/", "/serve/", "/kernels/", "/data/")
+
+# global-state numpy RNG entry points (np.random.<fn>(...) draws from the
+# process-wide legacy RandomState)
+_NP_GLOBAL = {
+    "beta", "binomial", "bytes", "chisquare", "choice", "dirichlet",
+    "exponential", "gamma", "geometric", "gumbel", "laplace", "lognormal",
+    "multinomial", "multivariate_normal", "normal", "pareto", "permutation",
+    "poisson", "rand", "randint", "randn", "random", "random_integers",
+    "random_sample", "ranf", "rayleigh", "sample", "seed", "shuffle",
+    "standard_cauchy", "standard_exponential", "standard_gamma",
+    "standard_normal", "standard_t", "uniform", "weibull",
+}
+
+
+def _in_sampling_path(mod: Module) -> bool:
+    p = "/" + mod.rel.replace("\\", "/")
+    return mod.kind == "fixture" or any(s in p for s in _SAMPLING_SUBPATHS)
+
+
+# ------------------------------------------------------------------ NDPP501
+@rule("NDPP501", "wall-clock-in-sampling",
+      "wall-clock reads in a sampling path make draws time-dependent — "
+      "golden files and bit-equality replays break")
+def wall_clock(mod: Module) -> Iterator[Finding]:
+    if not _in_sampling_path(mod):
+        return
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            d = mod.call_dotted(node)
+            if d in _CLOCKS:
+                yield Finding(
+                    "NDPP501", mod.rel, node.lineno, node.col_offset,
+                    f"{d}() in a sampling path — wall-clock state breaks "
+                    f"replayability; timing belongs in benchmarks/, seeds in "
+                    f"explicit PRNG keys")
+
+
+# ------------------------------------------------------------------ NDPP502
+@rule("NDPP502", "stdlib-random",
+      "the stdlib random module draws from hidden process-global state — "
+      "use jax.random with an explicit key",
+      kinds=("src", "script", "fixture"))
+def stdlib_random(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "random" or a.name.startswith("random."):
+                    yield Finding(
+                        "NDPP502", mod.rel, node.lineno, node.col_offset,
+                        "stdlib random imported — hidden global state; use "
+                        "jax.random (or a seeded np.random.default_rng) "
+                        "instead")
+        elif isinstance(node, ast.ImportFrom):
+            if node.level == 0 and node.module == "random":
+                yield Finding(
+                    "NDPP502", mod.rel, node.lineno, node.col_offset,
+                    "stdlib random imported — hidden global state; use "
+                    "jax.random (or a seeded np.random.default_rng) instead")
+
+
+# ------------------------------------------------------------------ NDPP503
+@rule("NDPP503", "unseeded-numpy-rng",
+      "unseeded NumPy randomness outside tests is unreproducible — pass an "
+      "explicit seed",
+      kinds=("src", "script", "fixture"))
+def numpy_rng(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = mod.call_dotted(node)
+        if d is None or not d.startswith("numpy.random."):
+            continue
+        leaf = d[len("numpy.random."):]
+        if leaf in ("default_rng", "Generator", "SeedSequence", "PCG64",
+                    "Philox"):
+            unseeded = not node.args or (
+                isinstance(node.args[0], ast.Constant)
+                and node.args[0].value is None)
+            if leaf == "default_rng" and unseeded and not node.keywords:
+                yield Finding(
+                    "NDPP503", mod.rel, node.lineno, node.col_offset,
+                    "np.random.default_rng() without a seed — draws are "
+                    "unreproducible; thread a seed (or derive one from the "
+                    "request key)")
+        elif leaf in _NP_GLOBAL:
+            yield Finding(
+                "NDPP503", mod.rel, node.lineno, node.col_offset,
+                f"np.random.{leaf}() uses the process-global legacy "
+                f"RandomState — any import-order change reshuffles draws; "
+                f"use a seeded np.random.default_rng(seed) instance")

@@ -1,0 +1,194 @@
+"""Rule family 4 — Pallas kernel checks (NDPP4xx).
+
+Every kernel package in this repo ships three layers: the ``pl.pallas_call``
+kernel (TPU), a ``ref.py`` jnp oracle (bit-compatible fallback the CPU CI
+actually runs), and an ``ops.py`` dispatcher.  These rules keep that
+contract mechanical:
+
+  NDPP401  a ``grid`` built with ``//`` whose divisibility is never
+           checked — a non-divisible shape silently drops tail rows
+  NDPP402  ``pl.load``/``pl.store`` with a computed (program_id-derived)
+           index and no mask — out-of-bounds lanes read/write garbage
+  NDPP403  a file defining a Pallas kernel in a package with no ``ref.py``
+           fallback — off-TPU parity becomes untestable
+  NDPP404  ``except Exception`` (or bare ``except``) — around kernel
+           imports this hides real Mosaic/toolchain breakage as a silent
+           fallback; catch ``ImportError`` (or the specific error)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional
+
+from ..common import Finding, Module
+from ..registry import rule
+
+_PL = "jax.experimental.pallas."
+
+
+def _pallas_calls(mod: Module) -> List[ast.Call]:
+    return [n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.Call)
+            and mod.call_dotted(n) == _PL + "pallas_call"]
+
+
+def _local_assignments(fn: ast.AST) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if isinstance(t, ast.Name):
+                out[t.id] = node.value
+            elif isinstance(t, ast.Tuple):
+                # m, r = W.shape — record element-wise only for Name targets
+                for el in t.elts:
+                    if isinstance(el, ast.Name):
+                        out.setdefault(el.id, None)
+    return out
+
+
+def _operand_repr(mod: Module, node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Constant):
+        return repr(node.value)
+    d = mod.dotted(node)
+    return d
+
+
+def _has_divisibility_guard(mod: Module, fn: ast.AST, left: Optional[str],
+                            right: Optional[str]) -> bool:
+    """Any `a % b` with matching operand names anywhere in the function —
+    asserts, raises, and padding computations all count as awareness."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+            gl = _operand_repr(mod, node.left)
+            gr = _operand_repr(mod, node.right)
+            if gr == right and (left is None or gl == left or gl is None):
+                return True
+    return False
+
+
+# ------------------------------------------------------------------ NDPP401
+@rule("NDPP401", "grid-divisibility",
+      "a pallas grid computed with // and no divisibility check silently "
+      "drops the remainder rows of the input")
+def grid_divisibility(mod: Module) -> Iterator[Finding]:
+    for call in _pallas_calls(mod):
+        fn = mod.enclosing_function(call)
+        if fn is None:
+            continue
+        assigns = _local_assignments(fn)
+        grid_expr = None
+        for kw in call.keywords:
+            if kw.arg == "grid":
+                grid_expr = kw.value
+            elif kw.arg == "grid_spec" and isinstance(kw.value, ast.Call):
+                for skw in kw.value.keywords:
+                    if skw.arg == "grid":
+                        grid_expr = skw.value
+        if grid_expr is None:
+            continue
+        elements = (grid_expr.elts if isinstance(grid_expr, ast.Tuple)
+                    else [grid_expr])
+        for el in elements:
+            expr = el
+            if isinstance(el, ast.Name) and assigns.get(el.id) is not None:
+                expr = assigns[el.id]
+            if not (isinstance(expr, ast.BinOp)
+                    and isinstance(expr.op, ast.FloorDiv)):
+                continue
+            left = _operand_repr(mod, expr.left)
+            right = _operand_repr(mod, expr.right)
+            if not _has_divisibility_guard(mod, fn, left, right):
+                yield Finding(
+                    "NDPP401", mod.rel, el.lineno, el.col_offset,
+                    f"grid dimension {left or '?'} // {right or '?'} has no "
+                    f"divisibility check in scope — a non-divisible shape "
+                    f"silently drops the tail block; assert "
+                    f"{left or 'n'} % {right or 'blk'} == 0 (or pad, or use "
+                    f"pl.cdiv with masking)")
+
+
+# ------------------------------------------------------------------ NDPP402
+def _mentions_program_id(mod: Module, node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            if mod.call_dotted(sub) == _PL + "program_id":
+                return True
+    return False
+
+
+@rule("NDPP402", "unmasked-computed-index",
+      "pl.load/pl.store with an arithmetic index and no mask reads/writes "
+      "out of bounds on the last block")
+def unmasked_index(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = mod.call_dotted(node)
+        if d not in (_PL + "load", _PL + "store"):
+            continue
+        if any(kw.arg == "mask" for kw in node.keywords):
+            continue
+        idx_args = node.args[1:2]  # (ref, idx, [val])
+        has_arith = any(
+            isinstance(sub, ast.BinOp)
+            for a in idx_args for sub in ast.walk(a)
+        )
+        if has_arith:
+            yield Finding(
+                "NDPP402", mod.rel, node.lineno, node.col_offset,
+                f"{d.rsplit('.', 1)[1]} with a computed index and no mask= — "
+                f"the last grid step can touch out-of-bounds rows; mask the "
+                f"tail or prove divisibility with an assert")
+
+
+# ------------------------------------------------------------------ NDPP403
+@rule("NDPP403", "missing-ref-fallback",
+      "a Pallas kernel package without a ref.py oracle cannot be tested "
+      "off-TPU — CPU CI loses the parity signal")
+def missing_ref(mod: Module) -> Iterator[Finding]:
+    if mod.path.name == "ref.py" or not _pallas_calls(mod):
+        return
+    pkg = mod.path.parent
+    if not (pkg / "ref.py").exists():
+        yield Finding(
+            "NDPP403", mod.rel, 1, 0,
+            f"{mod.path.name} defines a pallas_call but package "
+            f"{pkg.name}/ has no ref.py fallback — add a jnp oracle so "
+            f"off-TPU CI can assert kernel parity")
+
+
+# ------------------------------------------------------------------ NDPP404
+@rule("NDPP404", "broad-except",
+      "except Exception hides real breakage (Mosaic/toolchain failures "
+      "masquerade as a clean fallback) — catch the specific error",
+      kinds=("src", "fixture"))
+def broad_except(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Try):
+            continue
+        has_import = any(
+            isinstance(sub, (ast.Import, ast.ImportFrom))
+            for b in node.body for sub in ast.walk(b)
+        )
+        for h in node.handlers:
+            if h.type is None:
+                broad = True
+            else:
+                d = mod.dotted(h.type)
+                broad = d in ("Exception", "BaseException",
+                              "builtins.Exception", "builtins.BaseException")
+                if not broad and isinstance(h.type, ast.Name):
+                    broad = h.type.id in ("Exception", "BaseException")
+            if not broad:
+                continue
+            if has_import:
+                msg = ("except Exception around an import — a real "
+                       "toolchain/Mosaic failure becomes a silent fallback; "
+                       "catch ImportError")
+            else:
+                msg = ("broad except Exception — catch the specific "
+                       "exception the guarded call can raise")
+            yield Finding("NDPP404", mod.rel, h.lineno, h.col_offset, msg)

@@ -1,0 +1,110 @@
+"""Rule family 3 — recompilation & transfer hazards (NDPP3xx).
+
+The engine's steady-state tick loop must compile exactly once per
+(backend, shape) — BENCH numbers and serving latency both die on silent
+recompiles — and the per-round loop must not round-trip to host behind
+the caller's back.  Lexical hazards:
+
+  NDPP301  ``jax.jit`` applied inside a Python loop: a fresh jit wrapper
+           per iteration has an empty cache every time
+  NDPP302  ``jnp.arange`` without an explicit dtype: the result is
+           platform-int (int32 vs int64 under ``JAX_ENABLE_X64``), which
+           splits the compile cache across x64 modes and leaks int64 into
+           int32 carries — the exact bug class PR 5 hit in
+           ``tree.sample_elementary``
+  NDPP303  implicit device→host transfers (``np.asarray``/``.item()``)
+           inside a Python loop in core/serve hot paths — use explicit
+           ``jax.device_get`` (visible under
+           ``jax.transfer_guard("disallow")``) or keep the loop on device
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..common import Finding, Module, loop_ancestors
+from ..registry import rule
+
+
+def _resolves_to_jit_call(mod: Module, node: ast.Call) -> bool:
+    d = mod.call_dotted(node)
+    if d == "jax.jit":
+        return True
+    if d == "functools.partial" and node.args:
+        return mod.dotted(node.args[0]) == "jax.jit"
+    return False
+
+
+# ------------------------------------------------------------------ NDPP301
+@rule("NDPP301", "jit-in-loop",
+      "jax.jit inside a Python loop builds a fresh (empty-cache) wrapper "
+      "per iteration — hoist the jit out of the loop",
+      kinds=("src", "script", "fixture"))
+def jit_in_loop(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and _resolves_to_jit_call(mod, node):
+            if loop_ancestors(mod, node):
+                yield Finding(
+                    "NDPP301", mod.rel, node.lineno, node.col_offset,
+                    "jax.jit called inside a Python loop — every iteration "
+                    "creates a new wrapper with an empty compile cache; "
+                    "hoist the jit (or the whole loop) out")
+
+
+# ------------------------------------------------------------------ NDPP302
+@rule("NDPP302", "platform-int-arange",
+      "jnp.arange without dtype= is platform-int: int64 under "
+      "JAX_ENABLE_X64, splitting the compile cache and leaking into int32 "
+      "carries (the PR 5 sample_elementary bug class)",
+      kinds=("src", "script", "fixture"))
+def bare_arange(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if mod.call_dotted(node) != "jax.numpy.arange":
+            continue
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            continue
+        # float-literal args already pin the float default; the hazard is
+        # the integer default following the x64 flag
+        if any(isinstance(a, ast.Constant) and isinstance(a.value, float)
+               for a in node.args):
+            continue
+        yield Finding(
+            "NDPP302", mod.rel, node.lineno, node.col_offset,
+            "jnp.arange without dtype= yields platform-dependent int32/"
+            "int64 — pin dtype (jnp.int32 for indices) so compiled shapes "
+            "and carries match across JAX_ENABLE_X64 modes")
+
+
+# ------------------------------------------------------------------ NDPP303
+_HOT_SUBPATHS = ("/core/", "/serve/")
+
+
+@rule("NDPP303", "implicit-transfer-in-loop",
+      "implicit device→host transfer inside a hot Python loop — make it "
+      "explicit (jax.device_get) or move the loop on device")
+def transfer_in_loop(mod: Module) -> Iterator[Finding]:
+    p = "/" + mod.rel.replace("\\", "/")
+    if mod.kind != "fixture" and not any(s in p for s in _HOT_SUBPATHS):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if mod.in_traced(node):
+            continue  # NDPP202's jurisdiction
+        is_np = mod.call_dotted(node) in ("numpy.asarray", "numpy.array")
+        is_item = (isinstance(node.func, ast.Attribute)
+                   and node.func.attr in ("item", "tolist")
+                   and not node.args)
+        if not (is_np or is_item):
+            continue
+        if loop_ancestors(mod, node):
+            what = (mod.call_dotted(node) if is_np
+                    else f".{node.func.attr}()")
+            yield Finding(
+                "NDPP303", mod.rel, node.lineno, node.col_offset,
+                f"{what} inside a hot-path Python loop is an implicit "
+                f"device→host transfer per iteration — use jax.device_get "
+                f"(explicit, transfer_guard-visible) or keep the loop on "
+                f"device (lax.while_loop)")

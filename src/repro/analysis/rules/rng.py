@@ -1,0 +1,190 @@
+"""Rule family 1 — RNG-key discipline (NDPP1xx).
+
+Every exactness guarantee in this repo (schedule-independent speculative
+rounds, tick-size-independent MCMC trajectories, restart-independent
+training) rests on the convention that the key consumed at step ``t`` of
+anything is ``fold_in(stream_key, t)`` — derived, never reused, never
+dependent on Python-side scheduling.  These rules flag the three ways the
+convention breaks:
+
+  NDPP101  the same key variable fed to two consuming sites
+  NDPP102  sequential ``split`` chaining in a Python loop (the schedule-
+           dependent pattern ``fold_in(key, t)`` exists to avoid)
+  NDPP103  a key defined outside a Python loop consumed inside it without
+           a per-iteration re-derivation (every iteration sees the same
+           randomness)
+
+"Consuming" means use as the key argument of a ``jax.random`` sampling
+function or of ``split`` — ``fold_in`` is a *derivation* and is exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from ..common import (
+    Finding, Module, assigned_names, loop_ancestors, walk_skipping_defs,
+)
+from ..registry import rule
+
+# jax.random functions whose first argument is a key they consume.
+_CONSUMERS = {
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical", "cauchy",
+    "chisquare", "choice", "dirichlet", "double_sided_maxwell", "exponential",
+    "gamma", "geometric", "gumbel", "laplace", "loggamma", "logistic",
+    "lognormal", "maxwell", "multivariate_normal", "normal", "orthogonal",
+    "pareto", "permutation", "poisson", "rademacher", "randint", "rayleigh",
+    "shuffle", "split", "t", "truncated_normal", "uniform", "wald", "weibull_min",
+}
+
+
+def _consumed_key_name(mod: Module, call: ast.Call) -> Optional[str]:
+    """Name of the key variable this call consumes, if any."""
+    d = mod.call_dotted(call)
+    if d is None or not d.startswith("jax.random."):
+        return None
+    fn = d[len("jax.random."):]
+    if fn not in _CONSUMERS:
+        return None
+    key_arg = call.args[0] if call.args else None
+    if key_arg is None:
+        for kw in call.keywords:
+            if kw.arg == "key":
+                key_arg = kw.value
+                break
+    if isinstance(key_arg, ast.Name):
+        return key_arg.id
+    return None
+
+
+def _targets(stmt: ast.stmt) -> List[ast.AST]:
+    if isinstance(stmt, ast.Assign):
+        return list(stmt.targets)
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [stmt.target]
+    return []
+
+
+def _loop_rebound(loop: ast.AST) -> Set[str]:
+    """Names rebound anywhere inside the loop (per-iteration values)."""
+    rebound: Set[str] = set()
+    if isinstance(loop, ast.For):
+        rebound |= assigned_names(loop.target)
+    for stmt in ast.walk(loop):
+        if isinstance(stmt, ast.stmt):
+            for t in _targets(stmt):
+                rebound |= assigned_names(t)
+    return rebound
+
+
+# ------------------------------------------------------------------ NDPP101
+@rule("NDPP101", "key-reuse",
+      "a PRNG key consumed twice yields correlated draws — re-derive with "
+      "fold_in/split between consumptions")
+def key_reuse(mod: Module) -> Iterator[Finding]:
+    bodies = [mod.tree.body] + [
+        n.body for n in ast.walk(mod.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+    for body in bodies:
+        yield from _scan_block(mod, body, consumed={})
+
+
+def _scan_block(mod: Module, stmts: List[ast.stmt],
+                consumed: Dict[str, int]) -> Iterator[Finding]:
+    """Straight-line key-state walk; ``if`` branches fork the state and
+    merge pessimistically (consumed-in-any-branch counts as consumed)."""
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue  # nested scopes are scanned as their own blocks
+        if isinstance(stmt, (ast.For, ast.While)):
+            # loop bodies get NDPP103's per-iteration analysis instead:
+            # one lexical consumption there runs many times
+            continue
+        if isinstance(stmt, ast.If):
+            merged: Dict[str, int] = dict(consumed)
+            for br in (stmt.body, stmt.orelse):
+                state = dict(consumed)
+                yield from _scan_block(mod, br, state)
+                for k, v in state.items():
+                    merged[k] = max(merged.get(k, 0), v)
+            consumed.clear()
+            consumed.update(merged)
+            continue
+        if isinstance(stmt, ast.Try):
+            for block in (stmt.body, stmt.orelse, stmt.finalbody,
+                          *[h.body for h in stmt.handlers]):
+                yield from _scan_block(mod, block, consumed)
+            continue
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            yield from _scan_block(mod, stmt.body, consumed)
+            continue
+        # simple statement: consumptions happen before the assignment
+        # rebinds targets (`k, sub = split(k)` is a single use of k)
+        for node in walk_skipping_defs(stmt):
+            if isinstance(node, ast.Call):
+                name = _consumed_key_name(mod, node)
+                if name is not None:
+                    if consumed.get(name):
+                        yield Finding(
+                            "NDPP101", mod.rel, node.lineno, node.col_offset,
+                            f"key {name!r} already consumed at line "
+                            f"{consumed[name]} — derive a fresh key "
+                            f"(fold_in) before this use")
+                    else:
+                        consumed[name] = node.lineno
+        for tgt in _targets(stmt):
+            for name in assigned_names(tgt):
+                consumed.pop(name, None)
+
+
+# ------------------------------------------------------------------ NDPP102
+@rule("NDPP102", "split-chain-in-loop",
+      "sequential split-chaining in a Python loop makes draws depend on the "
+      "host schedule; the repo convention is fold_in(stream_key, t)")
+def split_chain(mod: Module) -> Iterator[Finding]:
+    for stmt in ast.walk(mod.tree):
+        if not isinstance(stmt, ast.Assign):
+            continue
+        call = stmt.value
+        if not (isinstance(call, ast.Call)
+                and mod.call_dotted(call) == "jax.random.split"):
+            continue
+        arg = call.args[0] if call.args else None
+        if not isinstance(arg, ast.Name):
+            continue
+        rebound: Set[str] = set()
+        for t in stmt.targets:
+            rebound |= assigned_names(t)
+        # chained (the split key is rebound by its own split) AND inside a
+        # Python loop — lax loop bodies are functions, so they don't trip
+        # the loop_ancestors walk
+        if arg.id in rebound and loop_ancestors(mod, stmt):
+            yield Finding(
+                "NDPP102", mod.rel, call.lineno, call.col_offset,
+                f"key {arg.id!r} is split-chained inside a Python loop — "
+                f"use fold_in({arg.id}, t) so draw t is schedule-independent")
+
+
+# ------------------------------------------------------------------ NDPP103
+@rule("NDPP103", "loop-key-no-fold",
+      "a key consumed inside a Python loop without a per-iteration "
+      "re-derivation repeats the same randomness every iteration")
+def loop_key(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _consumed_key_name(mod, node)
+        if name is None:
+            continue
+        loops = loop_ancestors(mod, node)
+        if not loops:
+            continue
+        # innermost loop decides: a key rebound there is per-iteration
+        if name not in _loop_rebound(loops[0]):
+            yield Finding(
+                "NDPP103", mod.rel, node.lineno, node.col_offset,
+                f"key {name!r} comes from outside the loop and is never "
+                f"re-derived — every iteration consumes the same key; use "
+                f"fold_in({name}, <loop index>)")

@@ -1,0 +1,228 @@
+"""Rule family 2 — tracer hygiene (NDPP2xx).
+
+Inside a traced region (``@jax.jit`` body, ``lax.scan``/``while_loop``
+body, ``shard_map``/``pallas_call`` function, ...), values derived from
+the function's array parameters are tracers.  Branching on one raises a
+``ConcretizationTypeError`` at best; coercing one to a host value forces
+a silent device→host sync and a constant baked into the compiled program
+at worst.  These rules flag the hazards lexically:
+
+  NDPP201  Python ``if``/``while``/``assert`` on a parameter-derived value
+  NDPP202  host coercion (``.item()``/``.tolist()``, ``np.*`` calls,
+           ``float()``/``int()``/``bool()`` of a traced value)
+  NDPP203  host callbacks (``pure_callback``/``io_callback``/``debug.*``)
+           in sampler hot paths
+
+Static information is exempt: ``x.shape``/``x.ndim``/``x.dtype``,
+``len(x)``, ``isinstance`` checks, ``is None`` tests, and parameters
+declared in ``static_argnames`` (or keyword-bound onto a Pallas kernel
+via ``functools.partial``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from ..common import (
+    Finding, Module, STATIC_ATTRS, TracedDef, assigned_names,
+    walk_skipping_defs,
+)
+from ..registry import rule
+
+# numpy attribute calls that are dtype/constant constructors, fine to
+# reference inside traced code (they produce Python scalars/types, and
+# never touch a tracer)
+_NP_OK = {
+    "bool_", "complex64", "complex128", "dtype", "finfo", "float16",
+    "float32", "float64", "iinfo", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64",
+}
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _is_static_use(mod: Module, name_node: ast.Name) -> bool:
+    """True when this reference only extracts static (Python) information."""
+    cur: Optional[ast.AST] = mod.parents.get(name_node)
+    while isinstance(cur, (ast.Attribute, ast.Subscript)):
+        if isinstance(cur, ast.Attribute) and cur.attr in STATIC_ATTRS:
+            return True
+        cur = mod.parents.get(cur)
+    if isinstance(cur, ast.Call) and isinstance(cur.func, ast.Name):
+        if cur.func.id in ("len", "isinstance", "type", "hasattr", "getattr"):
+            return True
+    return False
+
+
+def _is_none_test(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+            and (any(isinstance(c, ast.Constant) and c.value is None
+                     for c in node.comparators)
+                 or (isinstance(node.left, ast.Constant)
+                     and node.left.value is None)))
+
+
+def _tainted_refs(mod: Module, expr: ast.AST, tainted: Set[str]) -> List[ast.Name]:
+    """Non-static references to tainted names inside ``expr``, with
+    ``is None`` comparisons pruned."""
+    offenders: List[ast.Name] = []
+    for node in ast.walk(expr):
+        if _is_none_test(node):
+            continue
+        if isinstance(node, ast.Name) and node.id in tainted:
+            # pruned subtrees: walk ancestors up to expr for an is-None test
+            cur: Optional[ast.AST] = node
+            in_none_test = False
+            while cur is not None:
+                if _is_none_test(cur):
+                    in_none_test = True
+                    break
+                if cur is expr:
+                    break
+                cur = mod.parents.get(cur)
+            if in_none_test:
+                continue
+            if not _is_static_use(mod, node):
+                offenders.append(node)
+    return offenders
+
+
+def _taint_for(mod: Module, tr: TracedDef) -> Set[str]:
+    """Parameter-derived (tracer) names, propagated through straight-line
+    assignments whose right side references a tainted name non-statically."""
+    fn = tr.node
+    tainted = set(_param_names(fn)) - tr.static_params
+    if isinstance(fn, ast.Lambda):
+        return tainted
+    for stmt in walk_skipping_defs(fn):
+        if isinstance(stmt, ast.Assign):
+            if _tainted_refs(mod, stmt.value, tainted):
+                for t in stmt.targets:
+                    tainted |= assigned_names(t)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) and stmt.value:
+            if _tainted_refs(mod, stmt.value, tainted):
+                tainted |= assigned_names(stmt.target)
+        elif isinstance(stmt, ast.For):
+            if _tainted_refs(mod, stmt.iter, tainted):
+                tainted |= assigned_names(stmt.target)
+    return tainted
+
+
+# ------------------------------------------------------------------ NDPP201
+@rule("NDPP201", "tracer-branch",
+      "Python if/while/assert on a value data-dependent on a traced "
+      "parameter — use lax.cond/lax.select, or mark the argument static")
+def tracer_branch(mod: Module) -> Iterator[Finding]:
+    for tr in mod.traced:
+        if isinstance(tr.node, ast.Lambda):
+            continue
+        tainted = _taint_for(mod, tr)
+        for node in walk_skipping_defs(tr.node):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+            else:
+                continue
+            offenders = _tainted_refs(mod, test, tainted)
+            if offenders:
+                kind = type(node).__name__.lower()
+                names = ", ".join(sorted({o.id for o in offenders}))
+                yield Finding(
+                    "NDPP201", mod.rel, node.lineno, node.col_offset,
+                    f"python {kind} on traced value(s) {names} inside a "
+                    f"jitted/traced function — this either fails to trace or "
+                    f"silently bakes in a constant; use lax.cond/jnp.where, "
+                    f"or declare the argument static")
+
+
+# ------------------------------------------------------------------ NDPP202
+@rule("NDPP202", "host-coercion-in-trace",
+      ".item()/np.*/float() inside a traced function forces a device sync "
+      "per call (or fails to trace) — keep the computation in jnp")
+def host_coercion(mod: Module) -> Iterator[Finding]:
+    for tr in mod.traced:
+        tainted = (_taint_for(mod, tr)
+                   if not isinstance(tr.node, ast.Lambda)
+                   else set(_param_names(tr.node)) - tr.static_params)
+        for node in walk_skipping_defs(tr.node):
+            if not isinstance(node, ast.Call):
+                continue
+            # x.item() / x.tolist()
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("item", "tolist")
+                    and not node.args):
+                yield Finding(
+                    "NDPP202", mod.rel, node.lineno, node.col_offset,
+                    f".{node.func.attr}() inside a traced function is a "
+                    f"device→host sync (and fails under jit) — keep the "
+                    f"value as a jax array")
+                continue
+            d = mod.call_dotted(node)
+            if d is not None and d.startswith("numpy."):
+                leaf = d.split(".", 1)[1]
+                if leaf not in _NP_OK:
+                    yield Finding(
+                        "NDPP202", mod.rel, node.lineno, node.col_offset,
+                        f"host numpy call {d}() inside a traced function — "
+                        f"numpy materializes tracers on host; use the jnp "
+                        f"equivalent")
+                continue
+            # float(x)/int(x)/bool(x) of a traced value
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and node.args):
+                if _tainted_refs(mod, node.args[0], tainted):
+                    yield Finding(
+                        "NDPP202", mod.rel, node.lineno, node.col_offset,
+                        f"{node.func.id}() of a traced value inside a "
+                        f"jitted/traced function — concretizes the tracer; "
+                        f"use jnp casts/astype instead")
+
+
+# ------------------------------------------------------------------ NDPP203
+_CALLBACKS = {
+    "jax.pure_callback",
+    "jax.experimental.io_callback",
+    "jax.debug.callback",
+    "jax.debug.print",
+    "jax.experimental.host_callback.call",
+    "jax.experimental.host_callback.id_tap",
+}
+
+_HOT_SUBPATHS = ("/core/", "/serve/", "/kernels/")
+
+
+def _hot_path(mod: Module) -> bool:
+    p = "/" + mod.rel.replace("\\", "/")
+    return mod.kind == "fixture" or any(s in p for s in _HOT_SUBPATHS)
+
+
+@rule("NDPP203", "callback-in-hot-path",
+      "host callbacks serialize the device stream — never in sampler hot "
+      "paths (core/, serve/, kernels/)")
+def callbacks(mod: Module) -> Iterator[Finding]:
+    if not _hot_path(mod):
+        return
+    for tr in mod.traced:
+        for node in walk_skipping_defs(tr.node):
+            if isinstance(node, ast.Call):
+                d = mod.call_dotted(node)
+                if d in _CALLBACKS:
+                    yield Finding(
+                        "NDPP203", mod.rel, node.lineno, node.col_offset,
+                        f"{d} inside a traced sampler hot path — a host "
+                        f"callback stalls the per-round device pipeline; "
+                        f"move it out of the tick loop or behind a debug "
+                        f"flag")

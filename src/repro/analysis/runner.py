@@ -1,0 +1,88 @@
+"""Path walking + rule execution + suppression for ``ndpplint``."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from . import rules  # noqa: F401  — registers every rule family
+from .common import Finding, Module, classify, load_module
+from .registry import REGISTRY, rules_for
+from .suppress import Baseline, file_skipped, split_suppressed
+
+SKIP_DIR_NAMES = {"__pycache__", ".git", ".venv", "node_modules"}
+FIXTURE_DIR = "lint_fixtures"
+
+
+@dataclasses.dataclass
+class Report:
+    findings: List[Finding]
+    suppressed: List[Tuple[Finding, str]]
+    errors: List[str]           # unparseable files
+    files_checked: int
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings and not self.errors
+
+
+def iter_files(paths: List[Path], include_fixtures: bool = False) -> List[Path]:
+    """Expand files/dirs to .py files.  Directory walks skip the committed
+    violation corpus (tests/lint_fixtures/) unless asked — a file named on
+    the command line is always analyzed."""
+    out: List[Path] = []
+    for p in paths:
+        if p.is_file():
+            out.append(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                parts = set(f.parts)
+                if parts & SKIP_DIR_NAMES:
+                    continue
+                if not include_fixtures and FIXTURE_DIR in parts:
+                    continue
+                out.append(f)
+    seen, uniq = set(), []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def check_file(path: Path, rel: Optional[str] = None,
+               baseline: Optional[Baseline] = None) -> Report:
+    baseline = baseline or Baseline.empty()
+    try:
+        mod = load_module(path, rel)
+    except (SyntaxError, ValueError) as e:
+        return Report([], [], [f"{rel or path}: parse error: {e}"], 1)
+    if file_skipped(mod):
+        return Report([], [], [], 1)
+    findings: List[Finding] = []
+    for r in rules_for(mod):
+        findings.extend(r.check(mod))
+    findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    kept, dropped = split_suppressed(mod, findings, baseline)
+    return Report(kept, dropped, [], 1)
+
+
+def check_paths(paths: List[Path], baseline: Optional[Baseline] = None,
+                include_fixtures: bool = False,
+                root: Optional[Path] = None) -> Report:
+    root = root or Path.cwd()
+    files = iter_files(paths, include_fixtures=include_fixtures)
+    findings: List[Finding] = []
+    suppressed: List[Tuple[Finding, str]] = []
+    errors: List[str] = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        rep = check_file(f, rel, baseline)
+        findings.extend(rep.findings)
+        suppressed.extend(rep.suppressed)
+        errors.extend(rep.errors)
+    return Report(findings, suppressed, errors, len(files))

@@ -1,0 +1,129 @@
+"""Finding suppression: inline comments and the committed baseline file.
+
+Inline syntax (checked on the finding's line, or on an immediately
+preceding comment-only line)::
+
+    x = jnp.arange(n)          # ndpplint: disable=NDPP302  <reason>
+    # ndpplint: disable=NDPP301,NDPP302  <reason>
+    y = jax.jit(f)(x)
+
+A whole file opts out with ``# ndpplint: skip-file`` in its first ten
+lines.
+
+The baseline file (``tools/ndpplint_baseline.json``) records *accepted*
+findings — known exceptions with a one-line justification each::
+
+    {"entries": [
+      {"path": "src/repro/core/rejection.py", "rule": "NDPP303",
+       "contains": "np.asarray(accept)",
+       "reason": "per-round host sync is the known ROADMAP item-2 debt"},
+      {"path": "src/repro/models/moe.py", "rule": "*",
+       "reason": "LM-template module, not on any sampler path"}
+    ]}
+
+``path`` matches exactly, or as a directory prefix when it ends with
+``/``.  ``rule`` is an id or ``"*"``.  ``contains`` (optional) must be a
+substring of the flagged source line, so entries survive line-number
+drift.  ``reason`` is mandatory: a baseline entry without a justification
+is itself an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from .common import Finding, Module
+
+_DISABLE_RE = re.compile(r"#\s*ndpplint:\s*disable=([A-Z0-9,\s]+)")
+_SKIP_FILE_RE = re.compile(r"#\s*ndpplint:\s*skip-file")
+
+
+def file_skipped(mod: Module) -> bool:
+    return any(_SKIP_FILE_RE.search(ln) for ln in mod.lines[:10])
+
+
+def _disabled_rules(line: str) -> set:
+    m = _DISABLE_RE.search(line)
+    if not m:
+        return set()
+    return {tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+
+
+def inline_suppressed(mod: Module, f: Finding) -> bool:
+    if f.rule in _disabled_rules(mod.line_text(f.line)):
+        return True
+    prev = mod.line_text(f.line - 1).strip()
+    if prev.startswith("#") and f.rule in _disabled_rules(prev):
+        return True
+    return False
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    path: str
+    rule: str
+    reason: str
+    contains: Optional[str] = None
+
+    def matches(self, f: Finding, line_text: str) -> bool:
+        if self.path.endswith("/"):
+            if not f.path.startswith(self.path):
+                return False
+        elif f.path != self.path:
+            return False
+        if self.rule != "*" and self.rule != f.rule:
+            return False
+        if self.contains is not None and self.contains not in line_text:
+            return False
+        return True
+
+
+class Baseline:
+    def __init__(self, entries: List[BaselineEntry]):
+        self.entries = entries
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        data = json.loads(path.read_text())
+        entries = []
+        for i, e in enumerate(data.get("entries", [])):
+            if not e.get("reason", "").strip():
+                raise ValueError(
+                    f"{path}: baseline entry {i} ({e.get('path')}, "
+                    f"{e.get('rule')}) has no justification — every accepted "
+                    f"exception needs a reason")
+            entries.append(BaselineEntry(
+                path=e["path"], rule=e.get("rule", "*"),
+                reason=e["reason"], contains=e.get("contains")))
+        return cls(entries)
+
+    @classmethod
+    def empty(cls) -> "Baseline":
+        return cls([])
+
+    def match(self, f: Finding, line_text: str) -> Optional[BaselineEntry]:
+        for e in self.entries:
+            if e.matches(f, line_text):
+                return e
+        return None
+
+
+def split_suppressed(
+    mod: Module, findings: List[Finding], baseline: Baseline
+) -> Tuple[List[Finding], List[Tuple[Finding, str]]]:
+    """(kept, [(suppressed finding, why)]) for one module's findings."""
+    kept: List[Finding] = []
+    dropped: List[Tuple[Finding, str]] = []
+    for f in findings:
+        if inline_suppressed(mod, f):
+            dropped.append((f, "inline disable"))
+            continue
+        entry = baseline.match(f, mod.line_text(f.line))
+        if entry is not None:
+            dropped.append((f, f"baseline: {entry.reason}"))
+            continue
+        kept.append(f)
+    return kept, dropped

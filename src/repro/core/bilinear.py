@@ -30,7 +30,7 @@ def bilinear_scores_fast(Z: jax.Array, W: jax.Array) -> jax.Array:
         from repro.kernels.bilinear import ops as _ops
 
         return _ops.bilinear(Z, W)
-    except Exception:  # pragma: no cover - kernel unavailable
+    except ImportError:  # pragma: no cover - kernel unavailable
         return bilinear_scores(Z, W)
 
 

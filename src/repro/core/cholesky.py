@@ -119,7 +119,7 @@ def sample_cholesky_blocked(
             qc = qc - jnp.outer(qz, zq) / denom
             return qc, take
 
-        q, takes = jax.lax.scan(step, q, jnp.arange(block))
+        q, takes = jax.lax.scan(step, q, jnp.arange(block, dtype=jnp.int32))
         return q, takes
 
     zb = zp.reshape(-1, block, r)

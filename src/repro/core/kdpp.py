@@ -87,7 +87,7 @@ def sample_fixed_size_e(lam: jax.Array, k: int, key: jax.Array) -> jax.Array:
         rem = rem - take.astype(rem.dtype)
         return rem, take
 
-    _, takes_rev = jax.lax.scan(step, jnp.asarray(k, jnp.int32), jnp.arange(n))
+    _, takes_rev = jax.lax.scan(step, jnp.asarray(k, jnp.int32), jnp.arange(n, dtype=jnp.int32))
     mask = takes_rev[::-1]
     return mask
 

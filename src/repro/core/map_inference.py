@@ -71,7 +71,7 @@ def greedy_map(params: NDPPParams, k: int) -> jax.Array:
         return (observed, mask), j
 
     init = (-jnp.ones((k_pad,), jnp.int32), jnp.zeros((k_pad,), bool))
-    (_, _), items = jax.lax.scan(step, init, jnp.arange(k))
+    (_, _), items = jax.lax.scan(step, init, jnp.arange(k, dtype=jnp.int32))
     return items
 
 

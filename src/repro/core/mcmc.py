@@ -222,7 +222,7 @@ def _cond_remove(state: MCMCState, slot: jax.Array,
     # row/col `slot` are ~0 after the downdate; pin them to the exact
     # identity padding so drift cannot accumulate there
     r = minv.shape[0]
-    e = jnp.arange(r) == slot
+    e = jnp.arange(r, dtype=jnp.int32) == slot
     new = jnp.where(e[:, None] | e[None, :], 0.0, new)
     new = new.at[slot, slot].set(1.0)
     return MCMCState(
@@ -244,7 +244,7 @@ def _cond_add(Z: jax.Array, x: jax.Array, state: MCMCState, j: jax.Array,
     delta = t - v @ pu
     d = jnp.where(pred & (jnp.abs(delta) > _TINY), delta, 1.0)
     r = minv.shape[0]
-    e = (jnp.arange(r) == slot).astype(minv.dtype)
+    e = (jnp.arange(r, dtype=jnp.int32) == slot).astype(minv.dtype)
     new = (
         minv
         + (jnp.outer(pu, vp) - jnp.outer(pu, e) - jnp.outer(e, vp)) / d
@@ -441,7 +441,7 @@ def _greedy_round(sp: SpectralNDPP, states: MCMCState, chain_keys: jax.Array,
     a = jax.vmap(lambda st: score_matrix(sp, st))(states)  # (C, 2K, 2K)
     scores = mops.score_all(sp.Z, a, force_interpret=force_interpret)
     taken = jax.vmap(
-        lambda st: (jnp.arange(sp.M)[None, :] ==
+        lambda st: (jnp.arange(sp.M, dtype=jnp.int32)[None, :] ==
                     jnp.where(st.mask, st.items, -1)[:, None]).any(0)
     )(states)
     # taken items are hard-excluded (-inf), NOT floored: if every untaken
@@ -475,7 +475,7 @@ def init_greedy(sp: SpectralNDPP, key: jax.Array, n_chains: int, k: int,
     k-NDPP chain initializer: starting states have det(L_Y) > 0 and are
     spread across high-mass subsets, which shortens burn-in.
     """
-    states = jax.vmap(lambda _: init_empty(sp))(jnp.arange(n_chains))
+    states = jax.vmap(lambda _: init_empty(sp))(jnp.arange(n_chains, dtype=jnp.int32))
     chain_keys = jax.random.split(key, n_chains)
     for i in range(k):
         states = _greedy_round(sp, states, chain_keys,
@@ -515,7 +515,7 @@ def sample_mcmc(
     n_steps = burn_in + thin * per_chain
     chain_keys = jax.random.split(key, n_chains)
     if k is None:
-        states = jax.vmap(lambda _: init_empty(sp))(jnp.arange(n_chains))
+        states = jax.vmap(lambda _: init_empty(sp))(jnp.arange(n_chains, dtype=jnp.int32))
     else:
         states = init_greedy(sp, jax.random.fold_in(key, 0x6d636d63),
                              n_chains, k)

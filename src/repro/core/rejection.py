@@ -286,7 +286,7 @@ def _fanout_keys(req_keys: jax.Array, starts: jax.Array, offsets: jax.Array):
 def auto_n_spec(sampler: NDPPSampler, max_spec: int = 64) -> int:
     """Speculation depth that accepts most requests in one round: the next
     power of two >= E[#trials] = det(Lhat+I)/det(L+I), capped at max_spec."""
-    expect = float(det_ratio_exact(sampler.sp))
+    expect = float(jax.device_get(det_ratio_exact(sampler.sp)))
     return int(min(max_spec, max(2, 1 << int(np.ceil(np.log2(max(1.0, expect)))))))
 
 
@@ -380,11 +380,12 @@ def drive_rounds(
     active = np.arange(n)
     spent = 0                      # identical for every still-active request
     cur = int(n_spec)
+    req_keys_h = jax.device_get(req_keys)   # one sync, outside the loop
     while active.size:
         cur = min(cur, max_spec, max_trials - spent)
         n_act = int(active.size)
         n_pad = 1 << max(0, n_act - 1).bit_length()
-        act_keys = jnp.asarray(np.asarray(req_keys)[active])
+        act_keys = jnp.asarray(req_keys_h[active])
         if n_pad > n_act:          # pad with repeats; results are discarded
             act_keys = jnp.concatenate(
                 [act_keys, jnp.broadcast_to(act_keys[:1], (n_pad - n_act, 2))]
@@ -395,9 +396,13 @@ def drive_rounds(
             jnp.arange(cur, dtype=jnp.uint32),
         )
         items, mask, accept = round_fn(keys)
-        acc = np.asarray(accept).reshape(n_pad, cur)[:n_act]
-        items_h = np.asarray(items).reshape(n_pad, cur, r)[:n_act]
-        mask_h = np.asarray(mask).reshape(n_pad, cur, r)[:n_act]
+        # the one designed device→host sync per round (ROADMAP item 2 is
+        # the fused megakernel that removes it); explicit so transfer
+        # guards see it as intentional
+        items_h, mask_h, acc = jax.device_get((items, mask, accept))
+        acc = acc.reshape(n_pad, cur)[:n_act]
+        items_h = items_h.reshape(n_pad, cur, r)[:n_act]
+        mask_h = mask_h.reshape(n_pad, cur, r)[:n_act]
 
         any_acc = acc.any(axis=1)
         first = acc.argmax(axis=1)

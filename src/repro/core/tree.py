@@ -149,7 +149,7 @@ def update_rows(tree: SampleTree, idx: jax.Array, rows: jax.Array,
         w_new = tree.W.at[idx].set(rows)
         blks = (idx // tree.block).astype(jnp.int32)
         gathered = w_new[blks[:, None] * tree.block
-                         + jnp.arange(tree.block)[None, :]]
+                         + jnp.arange(tree.block, dtype=jnp.int32)[None, :]]
         grams = jnp.einsum("nbi,nbj->nij", gathered.astype(jnp.float32),
                            gathered.astype(jnp.float32))
         levels = [tree.levels[-1].at[blks].set(
@@ -333,7 +333,7 @@ def sample_elementary(
         item = jnp.where(active, j, -1).astype(jnp.int32)
         return q, item
 
-    _, items = jax.lax.scan(step, q0, jnp.arange(r))
+    _, items = jax.lax.scan(step, q0, jnp.arange(r, dtype=jnp.int32))
     return items, items >= 0
 
 
@@ -479,7 +479,7 @@ def sample_elementary_batch(
         jax.vmap(lambda k: jax.random.split(k, r))(keys), 0, 1
     )
     depth = max(tree.depth, 1)
-    blk_ar = jnp.arange(tree.block)
+    blk_ar = jnp.arange(tree.block, dtype=jnp.int32)
     w_rows = tree.W.shape[0]                       # local rows under shard_map
     w_sharded = (axis_name is not None and m_pad_global is not None
                  and w_rows != m_pad_global)
@@ -686,5 +686,5 @@ def sample_elementary_dense(
         q = jnp.where(active, q_new, q)
         return q, jnp.where(active, j, -1).astype(jnp.int32)
 
-    _, items = jax.lax.scan(step, q0, jnp.arange(r))
+    _, items = jax.lax.scan(step, q0, jnp.arange(r, dtype=jnp.int32))
     return items, items >= 0

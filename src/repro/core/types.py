@@ -128,16 +128,16 @@ def d_from_sigma(sigma: jax.Array) -> jax.Array:
     half = sigma.shape[0]
     k = 2 * half
     d = jnp.zeros((k, k), sigma.dtype)
-    idx = jnp.arange(half)
+    idx = jnp.arange(half, dtype=jnp.int32)
     return d.at[2 * idx, 2 * idx + 1].set(sigma)
 
 
 def x_from_sigma(k: int, sigma: jax.Array) -> jax.Array:
     """Dense X = diag(I_K, [[0, s], [-s, 0]] blocks) in R^{2K x 2K}."""
     x = jnp.zeros((2 * k, 2 * k), sigma.dtype)
-    x = x.at[jnp.arange(k), jnp.arange(k)].set(1.0)
+    x = x.at[jnp.arange(k, dtype=jnp.int32), jnp.arange(k, dtype=jnp.int32)].set(1.0)
     half = sigma.shape[0]
-    i = k + 2 * jnp.arange(half)
+    i = k + 2 * jnp.arange(half, dtype=jnp.int32)
     x = x.at[i, i + 1].set(sigma)
     x = x.at[i + 1, i].set(-sigma)
     return x

@@ -37,5 +37,5 @@ def diverse_minibatch(
     sigma = 0.3 * jnp.ones((k_feat // 2,), jnp.float32)
     x = x_from_sigma(k_feat, sigma)
     taken = sample_cholesky(z, x, ks)
-    idx = jnp.where(taken, jnp.arange(n), -1)
+    idx = jnp.where(taken, jnp.arange(n, dtype=jnp.int32), -1)
     return idx, taken

@@ -26,7 +26,7 @@ try:  # TPU scratch memory spaces
     from jax.experimental.pallas import tpu as pltpu
 
     _VMEM = pltpu.VMEM
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
     _VMEM = None
 
 _NEG_INF = -1e30

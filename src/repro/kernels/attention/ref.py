@@ -29,17 +29,17 @@ def mha_ref(
     vf = jnp.repeat(vf, g, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
     sk = k.shape[2]
-    kpos = jnp.arange(sk)
+    kpos = jnp.arange(sk, dtype=jnp.int32)
     if kv_len is not None:
         # queries are the last sq positions of the kv_len-long valid prefix
-        qpos = kv_len[:, None] - sq + jnp.arange(sq)[None, :]   # (B, sq)
+        qpos = kv_len[:, None] - sq + jnp.arange(sq, dtype=jnp.int32)[None, :]   # (B, sq)
         mask = qpos[:, :, None] >= kpos[None, None, :]
         if not causal:  # still mask padding beyond kv_len
             mask = kpos[None, None, :] < kv_len[:, None, None]
         s = jnp.where(mask[:, None], s, -1e30)
     elif causal:
         # queries are the *last* sq positions of the sk-long key sequence
-        qpos = jnp.arange(sq) + (sk - sq)
+        qpos = jnp.arange(sq, dtype=jnp.int32) + (sk - sq)
         mask = qpos[:, None] >= kpos[None, :]
         s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)

@@ -23,7 +23,7 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 def _on_tpu() -> bool:
     try:
         return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
+    except RuntimeError:  # pragma: no cover - no backend initialized
         return False
 
 

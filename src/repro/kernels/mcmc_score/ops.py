@@ -25,7 +25,7 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 def _on_tpu() -> bool:
     try:
         return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
+    except RuntimeError:  # pragma: no cover - no backend initialized
         return False
 
 
@@ -99,7 +99,7 @@ def score_argmax_sharded(
         all_max = jax.lax.all_gather(loc_max, "model")     # (S, C)
         all_arg = jax.lax.all_gather(loc_arg, "model")
         win = all_max.argmax(axis=0)                       # (C,)
-        c = jnp.arange(all_max.shape[1])
+        c = jnp.arange(all_max.shape[1], dtype=jnp.int32)
         return all_max[win, c], all_arg[win, c]
 
     f = shard_map(inner, mesh=mesh, in_specs=(P("model", None), P(None)),

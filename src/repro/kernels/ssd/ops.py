@@ -22,7 +22,7 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
 def _on_tpu() -> bool:
     try:
         return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
+    except RuntimeError:  # pragma: no cover - no backend initialized
         return False
 
 
@@ -50,8 +50,8 @@ def ssd_chunked_ref(
     loga = jnp.log(jnp.maximum(af, 1e-37))
     cum = jnp.cumsum(loga, axis=2)                   # (B, nq, Q, H)
     total = cum[:, :, -1]                            # (B, nq, H)
-    rows = jnp.arange(chunk)[:, None]
-    cols = jnp.arange(chunk)[None, :]
+    rows = jnp.arange(chunk, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(chunk, dtype=jnp.int32)[None, :]
     lmask = rows >= cols
 
     @jax.checkpoint
@@ -77,7 +77,7 @@ def ssd_chunked_ref(
         )
         return h_new, y_inter + y_intra
 
-    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(nq))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(nq, dtype=jnp.int32))
     y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
     return y.astype(x.dtype), h_last
 

@@ -36,6 +36,6 @@ def ssd_ref(
         y_t = jnp.einsum("bhn,bhnp->bhp", cf[:, t], h_new)
         return h_new, y_t
 
-    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(s))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(s, dtype=jnp.int32))
     y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
     return y.astype(x.dtype), h_last

@@ -27,7 +27,7 @@ try:
     from jax.experimental.pallas import tpu as pltpu
 
     _VMEM = pltpu.VMEM
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
     _VMEM = None
 
 

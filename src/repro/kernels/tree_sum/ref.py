@@ -21,6 +21,6 @@ def gathered_block_grams_ref(
     recomputed block is bit-equal to the same block of a full rebuild —
     the incremental-update exactness invariant of ``core.tree.update_rows``.
     """
-    rows = blks[:, None] * block + jnp.arange(block)[None, :]  # (nb, block)
+    rows = blks[:, None] * block + jnp.arange(block, dtype=jnp.int32)[None, :]  # (nb, block)
     wb = W[rows].astype(jnp.float32)
     return jnp.einsum("nbi,nbj->nij", wb, wb)

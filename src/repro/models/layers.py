@@ -154,14 +154,14 @@ def chunked_causal_attention(
         qc = jax.lax.dynamic_slice_in_dim(q, qi * chunk, chunk, axis=2)
         qg = qc.astype(jnp.float32).reshape(b, kvh, g, chunk, d)
         sc = jnp.einsum("bhgqd,bhkd->bhgqk", qg * scale, kf)
-        rows = qi * chunk + jnp.arange(chunk)
-        cols = jnp.arange(s)
+        rows = qi * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        cols = jnp.arange(s, dtype=jnp.int32)
         sc = jnp.where(rows[:, None] >= cols[None, :], sc, -1e30)
         p = jax.nn.softmax(sc, axis=-1)
         o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
         return None, o.reshape(b, h, chunk, dv).astype(q.dtype)
 
-    _, outs = jax.lax.scan(body, None, jnp.arange(nq))
+    _, outs = jax.lax.scan(body, None, jnp.arange(nq, dtype=jnp.int32))
     return jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dv)
 
 
@@ -195,7 +195,7 @@ def sharded_decode_attention(
     scores = jnp.einsum("bkgd,bksd->bkgs", qg, k,
                         preferred_element_type=jnp.float32)
     scores = constrain(scores, mesh, seq_ax)
-    valid = jnp.arange(s)[None, :] < kv_len[:, None]            # (B, S)
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < kv_len[:, None]            # (B, S)
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     m = jnp.max(scores, axis=-1, keepdims=True)                 # all-reduce max
     p = jnp.exp(scores - m)
@@ -225,7 +225,7 @@ def attention_core(
         try:
             if jax.default_backend() == "tpu":
                 return aops.mha(q, k, v, causal=True)
-        except Exception:  # pragma: no cover
+        except RuntimeError:  # pragma: no cover - no backend initialized
             pass
         # adapt the query-chunk so the (B,H,chunk,S) f32 score tensor stays
         # inside the byte budget even for replicated-head configs
@@ -296,7 +296,7 @@ def attention_forward(
         # model axis themselves (GQA with kv < mesh extent)
         try:
             model_ext = mesh.shape["model"] if mesh is not None else 1
-        except Exception:
+        except KeyError:
             model_ext = 1
         use_seq = (
             mesh is not None

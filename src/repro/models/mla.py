@@ -121,8 +121,8 @@ def mla_forward(
         ) * scale
         sk = logits.shape[-1]
         # kv_len is (B,): new tokens end at each sequence's kv_len
-        qpos = jnp.arange(s)[None, :] + (kv_len[:, None] - s)   # (B, s)
-        mask = qpos[:, :, None] >= jnp.arange(sk)[None, None, :]
+        qpos = jnp.arange(s, dtype=jnp.int32)[None, :] + (kv_len[:, None] - s)   # (B, s)
+        mask = qpos[:, :, None] >= jnp.arange(sk, dtype=jnp.int32)[None, None, :]
         logits = jnp.where(mask[:, None], logits, -1e30)
         pattn = jax.nn.softmax(logits, axis=-1)
         o = jnp.einsum("bhqk,bhkn->bhqn", pattn,

@@ -306,7 +306,7 @@ def lm_loss(
         gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
         return acc + jnp.sum(lz - gold), None
 
-    total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), jnp.arange(nc))
+    total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), jnp.arange(nc, dtype=jnp.int32))
     return total / (b * s)
 
 

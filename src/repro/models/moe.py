@@ -72,7 +72,7 @@ def _dispatch_group(cfg: ModelConfig, xg: jax.Array, probs: jax.Array, cap: int)
     e_sorted = flat_e[order]
     tok_sorted = flat_tok[order]
     w_sorted = flat_w[order]
-    start = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+    start = jnp.searchsorted(e_sorted, jnp.arange(e, dtype=jnp.int32), side="left")
     pos = jnp.arange(n, dtype=jnp.int32) - start[e_sorted].astype(jnp.int32)
     keep = pos < cap
     slot = jnp.where(keep, e_sorted * cap + pos, e * cap)     # overflow slot

@@ -65,6 +65,28 @@ from repro.core.types import SpectralNDPP
 from repro.serve.catalog import Catalog, CatalogState, as_state
 
 
+def _host_prng_key(seed: int) -> np.ndarray:
+    """uint32[2] key bit-identical to ``jax.random.PRNGKey(seed)``.
+
+    Admission runs inside the tick loop, and building the key on device
+    dispatches a scalar convert kernel per request (which recompiles on
+    every call under ``jax_check_tracer_leaks``).  The threefry2x32 seed
+    layout is just the 64-bit seed split into two uint32 words, so build
+    it on host; fall back to the device path for non-default PRNG impls.
+    """
+    if jax.config.jax_default_prng_impl != "threefry2x32":  # pragma: no cover
+        return jax.device_get(jax.random.PRNGKey(seed))
+    s = int(seed)
+    if jax.config.jax_enable_x64:
+        # threefry_seed: hi = shift_right_logical(seed, 32), lo = low word
+        hi = (s & 0xFFFFFFFFFFFFFFFF) >> 32
+    else:
+        # the seed is canonicalized to int32 first, and a logical shift of
+        # a 32-bit value by 32 is zero — the hi word is always 0
+        hi = 0
+    return np.array([hi, s & 0xFFFFFFFF], np.uint32)
+
+
 @dataclasses.dataclass
 class SampleRequest:
     """One sampling request submitted to the engine.
@@ -281,7 +303,7 @@ class SamplerEngine:
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 self.slot_req[slot] = req
-                self.slot_key[slot] = np.asarray(jax.random.PRNGKey(req.seed))
+                self.slot_key[slot] = _host_prng_key(req.seed)
                 self.slot_trials[slot] = 0
                 self.slot_pin[slot] = self._cat
                 if self.backend == "mcmc":
@@ -327,8 +349,9 @@ class SamplerEngine:
                 fixed=self.mcmc_k is not None, p_swap=self.mcmc_p_swap,
                 refresh_every=self.mcmc_refresh_every)
         self._states = states
-        items_h = np.asarray(items_tr)   # (S, n_steps, R)
-        mask_h = np.asarray(mask_tr)
+        # the designed once-per-tick device→host sync; explicit so strict
+        # transfer-guard runs see it as intentional
+        items_h, mask_h = jax.device_get((items_tr, mask_tr))  # (S, n_steps, R)
         target = self.mcmc_burn_in + self.mcmc_thin
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None:
@@ -357,10 +380,14 @@ class SamplerEngine:
         if all(r is None for r in self.slot_req):
             return False
         self.ticks += 1
+        # operands cross the jit boundary as host numpy arrays: op-by-op
+        # jnp conversions here would dispatch (and, under
+        # jax_check_tracer_leaks, recompile) tiny convert/iota kernels on
+        # every tick
         keys = _fanout_keys(
-            jnp.asarray(self.slot_key),
-            jnp.asarray(self.slot_trials, jnp.uint32),
-            jnp.arange(self.n_spec, dtype=jnp.uint32),
+            self.slot_key,
+            np.asarray(self.slot_trials, np.uint32),
+            np.arange(self.n_spec, dtype=np.uint32),
         )
         if self._cat is None:
             slot_groups = [(None, [s for s in range(self.n_slots)
@@ -392,9 +419,12 @@ class SamplerEngine:
     def _harvest(self, slots: List[int], items, mask, accept):
         """Retire-or-advance the given slots from one round's outputs."""
         r = items.shape[-1]
-        acc = np.asarray(accept).reshape(self.n_slots, self.n_spec)
-        items_h = np.asarray(items).reshape(self.n_slots, self.n_spec, r)
-        mask_h = np.asarray(mask).reshape(self.n_slots, self.n_spec, r)
+        # the designed once-per-tick device→host sync; explicit so strict
+        # transfer-guard runs see it as intentional
+        items_h, mask_h, acc = jax.device_get((items, mask, accept))
+        acc = acc.reshape(self.n_slots, self.n_spec)
+        items_h = items_h.reshape(self.n_slots, self.n_spec, r)
+        mask_h = mask_h.reshape(self.n_slots, self.n_spec, r)
         for slot in slots:
             req = self.slot_req[slot]
             # only proposals inside the request's max_trials budget count,

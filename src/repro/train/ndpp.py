@@ -187,7 +187,7 @@ def _fit(
     losses: list = []
     carry = (params, opt_state)
     for lo, hi in _chunk_bounds(start_step, cfg.steps, cfg.scan_chunk):
-        carry, ls = run_chunk(carry, jnp.arange(lo, hi))
+        carry, ls = run_chunk(carry, jnp.arange(lo, hi, dtype=jnp.int32))
         losses.extend(np.asarray(ls).tolist())
         if log_fn and cfg.log_every and (
                 hi % cfg.log_every < cfg.scan_chunk or hi == cfg.steps):

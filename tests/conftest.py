@@ -8,6 +8,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+# NDPP_STRICT=1 runs the suite with implicit device->host transfers and
+# tracer leaks turned into hard errors (see repro.analysis.runtime).  The
+# config flags must be set before any jit executes, hence at import time.
+if os.environ.get("NDPP_STRICT") == "1":
+    from repro.analysis.runtime import enable_strict
+
+    enable_strict()
+
 
 def pytest_addoption(parser):
     parser.addoption(

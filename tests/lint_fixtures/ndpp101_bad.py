@@ -1,0 +1,8 @@
+"""Fixture: NDPP101 — the same PRNG key consumed twice."""
+import jax
+
+
+def draw_pair(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # EXPECT: NDPP101
+    return a, b

@@ -1,0 +1,10 @@
+"""Clean twin of ndpp101_bad: each draw gets its own derived key."""
+import jax
+
+
+def draw_pair(key):
+    ka = jax.random.fold_in(key, 0)
+    kb = jax.random.fold_in(key, 1)
+    a = jax.random.normal(ka, (4,))
+    b = jax.random.uniform(kb, (4,))
+    return a, b

@@ -1,0 +1,11 @@
+"""Fixture: NDPP102 — chained split inside a Python loop (draw t depends
+on every earlier iteration, so results change with the batching schedule)."""
+import jax
+
+
+def draws(key, n):
+    out = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)  # EXPECT: NDPP102
+        out.append(jax.random.normal(sub, ()))
+    return out

@@ -1,0 +1,11 @@
+"""Clean twin of ndpp102_bad: fold_in(key, t) keys each iteration off the
+loop index — draw t is independent of the schedule."""
+import jax
+
+
+def draws(key, n):
+    out = []
+    for t in range(n):
+        sub = jax.random.fold_in(key, t)
+        out.append(jax.random.normal(sub, ()))
+    return out

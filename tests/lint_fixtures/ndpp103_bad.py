@@ -1,0 +1,10 @@
+"""Fixture: NDPP103 — a key consumed inside a loop that never rederives
+it (every iteration draws identical randomness)."""
+import jax
+
+
+def noisy_rows(key, xs):
+    rows = []
+    for x in xs:
+        rows.append(jax.random.normal(key, x.shape))  # EXPECT: NDPP103
+    return rows

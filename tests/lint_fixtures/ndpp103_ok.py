@@ -1,0 +1,9 @@
+"""Clean twin of ndpp103_bad: per-iteration fold_in."""
+import jax
+
+
+def noisy_rows(key, xs):
+    rows = []
+    for i, x in enumerate(xs):
+        rows.append(jax.random.normal(jax.random.fold_in(key, i), x.shape))
+    return rows

@@ -1,0 +1,9 @@
+"""Fixture: NDPP201 — Python control flow on a traced value."""
+import jax
+
+
+@jax.jit
+def clamp(x, lo):
+    if x > lo:  # EXPECT: NDPP201
+        return x
+    return lo

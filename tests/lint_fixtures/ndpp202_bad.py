@@ -1,0 +1,10 @@
+"""Fixture: NDPP202 — host coercions inside a traced function."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def mean_scalar(x):
+    m = x.mean().item()  # EXPECT: NDPP202
+    y = np.square(x)  # EXPECT: NDPP202
+    return float(x[0]) + m + y[0]  # EXPECT: NDPP202

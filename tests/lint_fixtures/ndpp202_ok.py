@@ -1,0 +1,12 @@
+"""Clean twin of ndpp202_bad: everything stays jnp; numpy dtype
+constructors (np.float32 etc.) are static and allowed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def mean_scalar(x):
+    m = x.mean()
+    y = jnp.square(x).astype(np.float32)
+    return x[0] + m + y[0]

@@ -1,0 +1,8 @@
+"""Fixture: NDPP203 — a host callback inside a traced hot-path function."""
+import jax
+
+
+@jax.jit
+def traced_debug(x):
+    jax.debug.print("x = {}", x)  # EXPECT: NDPP203
+    return x * 2

@@ -1,0 +1,7 @@
+"""Clean twin of ndpp203_bad: no host callback in the traced body."""
+import jax
+
+
+@jax.jit
+def traced_scale(x):
+    return x * 2

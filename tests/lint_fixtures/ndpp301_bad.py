@@ -1,0 +1,11 @@
+"""Fixture: NDPP301 — jax.jit called inside a Python loop (fresh wrapper,
+empty cache, recompile every iteration)."""
+import jax
+
+
+def sweep(xs):
+    outs = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2)  # EXPECT: NDPP301
+        outs.append(f(x))
+    return outs

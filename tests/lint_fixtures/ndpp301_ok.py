@@ -1,0 +1,8 @@
+"""Clean twin of ndpp301_bad: jit hoisted out of the loop — one wrapper,
+one cache."""
+import jax
+
+
+def sweep(xs):
+    f = jax.jit(lambda v: v * 2)
+    return [f(x) for x in xs]

@@ -1,0 +1,8 @@
+"""Fixture: NDPP302 — bare jnp.arange: int32 by default, int64 under
+JAX_ENABLE_X64, so the same call site splits the compile cache between
+the two modes."""
+import jax.numpy as jnp
+
+
+def positions(n):
+    return jnp.arange(n)  # EXPECT: NDPP302

@@ -1,0 +1,10 @@
+"""Clean twin of ndpp302_bad: dtype pinned (and float steps are exempt)."""
+import jax.numpy as jnp
+
+
+def positions(n):
+    return jnp.arange(n, dtype=jnp.int32)
+
+
+def grid(n):
+    return jnp.arange(0.0, 1.0, 1.0 / n)

@@ -1,0 +1,14 @@
+"""Fixture: NDPP303 — implicit device→host transfers inside a driver
+loop (one hidden sync per iteration)."""
+import numpy as np
+
+
+def drive(round_fn, keys, n_rounds):
+    outs = []
+    for _ in range(n_rounds):
+        res = round_fn(keys)
+        outs.append(np.asarray(res))  # EXPECT: NDPP303
+        done = res.sum().item()  # EXPECT: NDPP303
+        if done:
+            break
+    return outs

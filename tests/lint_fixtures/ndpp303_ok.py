@@ -1,0 +1,13 @@
+"""Clean twin of ndpp303_bad: the per-round sync is an explicit
+jax.device_get, visible to transfer guards."""
+import jax
+
+
+def drive(round_fn, keys, n_rounds):
+    outs = []
+    for _ in range(n_rounds):
+        res, done = jax.device_get(round_fn(keys))
+        outs.append(res)
+        if done:
+            break
+    return outs

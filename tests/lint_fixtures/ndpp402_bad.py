@@ -1,0 +1,9 @@
+"""Fixture: NDPP402 — pl.load/pl.store with computed indices and no
+mask (the last grid step walks off the end)."""
+import jax.experimental.pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    v = pl.load(x_ref, (i * 8,))  # EXPECT: NDPP402
+    pl.store(o_ref, (i * 8,), v)  # EXPECT: NDPP402

@@ -1,0 +1,11 @@
+"""Clean twin of ndpp402_bad: the tail is masked."""
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _kernel(x_ref, o_ref, *, m):
+    i = pl.program_id(0)
+    idx = i * 8 + jnp.arange(8, dtype=jnp.int32)
+    live = idx < m
+    v = pl.load(x_ref, (idx,), mask=live, other=0.0)
+    pl.store(o_ref, (idx,), v, mask=live)

@@ -1,0 +1,20 @@
+# EXPECT: NDPP403
+"""Fixture: NDPP403 — a Pallas kernel in a package with no ref.py
+oracle (off-TPU parity untestable)."""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def incr(x):
+    m = x.shape[0]
+    assert m % 8 == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // 8,),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+    )(x)

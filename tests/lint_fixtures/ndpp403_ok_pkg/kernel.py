@@ -1,0 +1,18 @@
+"""Clean twin of ndpp403_bad_pkg: ref.py lives next door."""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1.0
+
+
+def incr(x):
+    m = x.shape[0]
+    assert m % 8 == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // 8,),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+    )(x)

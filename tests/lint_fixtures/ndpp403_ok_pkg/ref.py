@@ -1,0 +1,5 @@
+"""jnp oracle for the clean-twin kernel package."""
+
+
+def incr(x):
+    return x + 1.0

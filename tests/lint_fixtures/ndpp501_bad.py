@@ -1,0 +1,11 @@
+"""Fixture: NDPP501 — wall-clock reads in a sampling path (results
+change run to run; benchmarks excepted via path scoping)."""
+import time
+
+
+def sample_with_timeout(sampler, key, budget_s):
+    start = time.time()  # EXPECT: NDPP501
+    out = []
+    while time.time() - start < budget_s:  # EXPECT: NDPP501
+        out.append(sampler(key))
+    return out

@@ -1,0 +1,5 @@
+"""Clean twin of ndpp501_bad: the budget is a deterministic trial count."""
+
+
+def sample_with_budget(sampler, key, max_trials):
+    return [sampler(key) for _ in range(max_trials)]

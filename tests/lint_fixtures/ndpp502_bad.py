@@ -1,0 +1,7 @@
+"""Fixture: NDPP502 — the stdlib random module in a sampling path
+(process-global mutable state, unseeded by default)."""
+import random  # EXPECT: NDPP502
+
+
+def jitter(xs):
+    return [x + random.random() for x in xs]

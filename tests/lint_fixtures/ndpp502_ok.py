@@ -1,0 +1,9 @@
+"""Clean twin of ndpp502_bad: randomness comes from an explicit key."""
+import jax
+
+
+def jitter(key, xs):
+    import jax.numpy as jnp
+
+    noise = jax.random.uniform(key, (len(xs),))
+    return jnp.asarray(xs) + noise

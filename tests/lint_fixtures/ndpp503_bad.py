@@ -1,0 +1,12 @@
+"""Fixture: NDPP503 — unseeded NumPy RNGs: default_rng() without a seed
+and the legacy global-state API."""
+import numpy as np
+
+
+def noise(shape):
+    rng = np.random.default_rng()  # EXPECT: NDPP503
+    return rng.normal(size=shape)
+
+
+def legacy_noise(shape):
+    return np.random.randn(*shape)  # EXPECT: NDPP503

@@ -1,0 +1,7 @@
+"""Clean twin of ndpp503_bad: the generator is explicitly seeded."""
+import numpy as np
+
+
+def noise(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=shape)

@@ -1,0 +1,17 @@
+"""Fixture: NDPP401 — grid built with // and no divisibility check."""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_blocks(x, block):
+    m = x.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // block,),  # EXPECT: NDPP401
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+    )(x)

@@ -1,0 +1,18 @@
+"""Clean twin of ndpp401_bad: the divisibility is asserted in scope."""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double_blocks(x, block):
+    m = x.shape[0]
+    assert m % block == 0, "pad the input to a block multiple"
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // block,),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+    )(x)

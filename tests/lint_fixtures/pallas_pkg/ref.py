@@ -1,0 +1,6 @@
+"""jnp oracle stub so the NDPP401 fixtures in this package exercise only
+the grid-divisibility rule (NDPP403 wants a ref.py next to any kernel)."""
+
+
+def double_blocks(x):
+    return x * 2.0

@@ -1,0 +1,9 @@
+"""Fixture: whole-file opt-out via the skip-file pragma."""
+# ndpplint: skip-file  (vendored example, not held to repo conventions)
+import random
+
+import jax.numpy as jnp
+
+
+def anything_goes(key, n):
+    return jnp.arange(n) * random.random()

@@ -1,0 +1,148 @@
+"""ndpplint: the fixture corpus pins every rule's exact (rule, line)
+behavior, suppression paths, baseline semantics, and CLI exit codes.
+
+Each ``tests/lint_fixtures/*_bad.py`` carries ``# EXPECT: NDPPnnn``
+comments on its violating lines; the test asserts the analyzer reports
+exactly that set — nothing missing, nothing extra — and that every
+``*_ok.py`` clean twin is silent.  This keeps rule behavior pinned line
+by line: a rule that drifts (new false positive, lost detection) fails
+here before it pollutes the src/ run.
+"""
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, all_rules, check_file, check_paths
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "lint_fixtures"
+
+_EXPECT_RE = re.compile(r"# EXPECT: (NDPP\d+)")
+
+
+def _expected(path: Path):
+    out = set()
+    for i, ln in enumerate(path.read_text().splitlines(), 1):
+        for m in _EXPECT_RE.finditer(ln):
+            out.add((m.group(1), i))
+    return out
+
+
+def _findings(path: Path):
+    rep = check_file(path, baseline=Baseline.empty())
+    assert not rep.errors, rep.errors
+    return {(f.rule, f.line) for f in rep.findings}
+
+
+BAD = sorted(FIXTURES.rglob("*bad*.py")) + sorted(
+    FIXTURES.glob("ndpp403_bad_pkg/*.py"))
+OK = sorted(p for p in FIXTURES.rglob("*ok*.py") if p.name != "ref.py")
+
+
+def test_corpus_is_complete():
+    """One violation fixture per rule: every registered rule appears in
+    some EXPECT annotation."""
+    annotated = set()
+    for p in FIXTURES.rglob("*.py"):
+        annotated |= {r for r, _ in _expected(p)}
+    registered = {r.id for r in all_rules()}
+    assert registered == annotated, (
+        f"rules without a fixture: {sorted(registered - annotated)}; "
+        f"stale annotations: {sorted(annotated - registered)}")
+    assert len(registered) >= 15
+
+
+@pytest.mark.parametrize("path", BAD, ids=lambda p: p.stem)
+def test_bad_fixture_exact_findings(path):
+    expect = _expected(path)
+    assert expect, f"{path} has no EXPECT annotations"
+    assert _findings(path) == expect
+
+
+@pytest.mark.parametrize("path", OK, ids=lambda p: p.stem)
+def test_clean_twin_is_silent(path):
+    assert _findings(path) == set()
+
+
+# ------------------------------------------------------------- suppression
+def test_inline_disable_suppresses():
+    rep = check_file(FIXTURES / "suppressed_inline.py",
+                     baseline=Baseline.empty())
+    assert not rep.findings
+    assert {(f.rule, f.line) for f, why in rep.suppressed} == {
+        ("NDPP302", 7), ("NDPP302", 12)}
+    assert all(why == "inline disable" for _, why in rep.suppressed)
+
+
+def test_skip_file_pragma():
+    rep = check_file(FIXTURES / "suppressed_skipfile.py",
+                     baseline=Baseline.empty())
+    assert not rep.findings and not rep.suppressed
+
+
+def test_baseline_suppresses_with_reason(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"entries": [
+        {"path": "tests/lint_fixtures/ndpp502_bad.py", "rule": "NDPP502",
+         "contains": "import random", "reason": "fixture exercise"}]}))
+    rep = check_paths([FIXTURES / "ndpp502_bad.py"],
+                      baseline=Baseline.load(bl))
+    assert not rep.findings
+    assert [f.rule for f, _ in rep.suppressed] == ["NDPP502"]
+    assert "fixture exercise" in rep.suppressed[0][1]
+
+
+def test_baseline_entry_requires_reason(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"entries": [
+        {"path": "x.py", "rule": "NDPP101", "reason": "  "}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(bl)
+
+
+def test_committed_baseline_is_valid():
+    """Every entry in the committed baseline parses and has a reason."""
+    bl = Baseline.load(REPO / "tools" / "ndpplint_baseline.json")
+    assert all(e.reason.strip() for e in bl.entries)
+
+
+# -------------------------------------------------------------------- CLI
+def _cli(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+
+
+def test_cli_exits_nonzero_on_each_violation_fixture():
+    for path in BAD:
+        r = _cli(str(path.relative_to(REPO)), "--no-baseline")
+        assert r.returncode == 1, (path, r.stdout, r.stderr)
+
+
+def test_cli_exits_zero_on_final_tree():
+    """The acceptance gate: src/repro is clean (or baseline-justified)."""
+    r = _cli("src/repro")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_list_rules_covers_five_families():
+    r = _cli("--list-rules")
+    assert r.returncode == 0
+    families = {line[:6][:5] for line in r.stdout.splitlines() if line}
+    assert {"NDPP1", "NDPP2", "NDPP3", "NDPP4", "NDPP5"} <= families
+
+
+def test_cli_unknown_path_is_usage_error():
+    r = _cli("no/such/dir")
+    assert r.returncode == 2
+
+
+def test_directory_walk_skips_fixtures_by_default():
+    rep = check_paths([REPO / "tests"], baseline=Baseline.empty())
+    assert not any("lint_fixtures" in f.path for f in rep.findings)
