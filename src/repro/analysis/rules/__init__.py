@@ -1,2 +1,9 @@
 """Rule modules register themselves on import (see ``registry.rule``)."""
-from . import determinism, pallas, recompile, rng, tracer  # noqa: F401
+from . import (  # noqa: F401
+    determinism,
+    observability,
+    pallas,
+    recompile,
+    rng,
+    tracer,
+)

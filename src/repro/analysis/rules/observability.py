@@ -1,0 +1,76 @@
+"""Rule family 6 — observability hygiene (NDPP6xx).
+
+PR 7's telemetry contract: instrumentation is host-only and free.  A
+clock read or a metric-recording call inside a jit-traced body breaks
+that contract twice over — it executes at *trace* time, so it measures
+tracing (once per compile) rather than runtime, and it bakes whatever
+host value it saw into the compiled program.  Record at the existing
+host-sync points instead: take timestamps around the jitted call, and
+feed metrics from values already brought to host by the designed
+``jax.device_get`` (see ``repro.obs`` and docs/observability.md).
+
+  NDPP601  wall-clock read inside a traced body (measures trace time)
+  NDPP602  metric-recording call (``.inc()``/``.observe()`` or a
+           ``repro.obs`` entry point) inside a traced body
+
+NDPP602 deliberately does not match ``.set(...)`` — the gauge method is
+lexically indistinguishable from ``x.at[i].set(v)`` — so gauges inside
+traced code are caught only when set via a ``repro.obs`` dotted call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..common import Finding, Module
+from ..registry import rule
+from .determinism import _CLOCKS
+
+# metric-recording attribute calls; .set() is excluded (jnp's
+# functional-update idiom x.at[i].set(v) uses the same attribute name)
+_RECORDERS = {"inc", "observe"}
+
+
+# ------------------------------------------------------------------ NDPP601
+@rule("NDPP601", "clock-in-trace",
+      "a wall-clock read inside a traced body runs at trace time — it "
+      "measures tracing (once per compile), not runtime, and bakes a "
+      "stale constant into the compiled program",
+      kinds=("src", "script", "fixture"))
+def clock_in_trace(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not mod.in_traced(node):
+            continue
+        d = mod.call_dotted(node)
+        if d in _CLOCKS:
+            yield Finding(
+                "NDPP601", mod.rel, node.lineno, node.col_offset,
+                f"{d}() inside a traced body executes at trace time, not "
+                f"per call — time around the jitted call on the host "
+                f"(repro.obs spans do this at the existing sync points)")
+
+
+# ------------------------------------------------------------------ NDPP602
+@rule("NDPP602", "metric-in-trace",
+      "a metric-recording call inside a traced body fires once per "
+      "compile with a tracer argument — record on the host from values "
+      "the designed device_get already returned",
+      kinds=("src", "script", "fixture"))
+def metric_in_trace(mod: Module) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call) or not mod.in_traced(node):
+            continue
+        d = mod.call_dotted(node)
+        if d is not None and d.startswith("repro.obs"):
+            yield Finding(
+                "NDPP602", mod.rel, node.lineno, node.col_offset,
+                f"{d}() inside a traced body — telemetry is host-only; "
+                f"record after the jitted call returns")
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr in _RECORDERS:
+            yield Finding(
+                "NDPP602", mod.rel, node.lineno, node.col_offset,
+                f".{func.attr}() inside a traced body records a tracer at "
+                f"trace time (once per compile, not per call) — piggyback "
+                f"the value onto the round's device_get and record on host")

@@ -259,6 +259,7 @@ def sample_dynamic_many(
     max_spec: int = 64,
     split_keys: bool = True,
     mesh: Optional[Mesh] = None,
+    observer=None,
 ) -> RejectionSample:
     """Speculative rejection sampling against a dynamic-catalog state.
 
@@ -281,4 +282,5 @@ def sample_dynamic_many(
         else (lambda keys: _spec_round_dual_sharded(prop, live_sp, keys,
                                                     mesh)))
     return drive_rounds(round_fn, req_keys, prop.R, n_spec=n_spec,
-                        max_trials=max_trials, grow=grow, max_spec=max_spec)
+                        max_trials=max_trials, grow=grow, max_spec=max_spec,
+                        observer=observer)

@@ -499,6 +499,7 @@ def sample_mcmc(
     p_swap: float = 0.25,
     refresh_every: int = 64,
     mesh: Optional[Mesh] = None,
+    observer=None,
 ) -> MCMCSample:
     """Draw ``n_samples`` subsets by MCMC (exact target Pr(Y) ∝ det(L_Y)).
 
@@ -508,7 +509,11 @@ def sample_mcmc(
     ``ceil(n_samples / n_chains)`` states taken every ``thin`` steps after
     ``burn_in``.  ``mesh``: keep the catalog rows device-local across the
     mesh "model" axis (``run_chains_sharded``; draws are bit-identical to
-    the single-device chains).
+    the single-device chains).  ``observer``: duck-typed telemetry sink —
+    receives one ``on_mcmc(steps=, n_chains=, accept_fraction=)`` call
+    with host scalars read off the acceptance trace the call already
+    returns (one extra scalar ``device_get``, outside any jit; draws are
+    untouched).
     """
     n_chains = min(n_chains, n_samples)
     per_chain = -(-n_samples // n_chains)
@@ -527,6 +532,9 @@ def sample_mcmc(
         _, items_tr, mask_tr, acc_tr = run_chains_sharded(
             sp, chain_keys, states, mesh=mesh, n_steps=n_steps,
             fixed=k is not None, p_swap=p_swap, refresh_every=refresh_every)
+    if observer is not None:
+        observer.on_mcmc(steps=n_steps * n_chains, n_chains=n_chains,
+                         accept_fraction=float(jax.device_get(acc_tr.mean())))
     take = burn_in + thin * np.arange(1, per_chain + 1) - 1  # (per_chain,)
     items = items_tr[:, take].reshape(-1, items_tr.shape[-1])[:n_samples]
     mask = mask_tr[:, take].reshape(-1, mask_tr.shape[-1])[:n_samples]

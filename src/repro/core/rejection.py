@@ -323,6 +323,7 @@ def sample_batched_many(
     max_spec: int = 64,
     split_keys: bool = True,
     mesh: Optional[Mesh] = None,
+    observer=None,
 ) -> RejectionSample:
     """Speculative rejection sampling for many requests sharing each round.
 
@@ -340,6 +341,8 @@ def sample_batched_many(
     (``_spec_round_sharded``); pass an already-placed ``shard_sampler``
     output to avoid re-sharding per round.  Draws, trial counts, and
     accept flags are bit-identical to the single-device path.
+    ``observer``: duck-typed telemetry sink (e.g.
+    ``repro.obs.RegistryObserver``) — see ``drive_rounds``.
     Returns a stacked RejectionSample with leading dim n.
     """
     if n_spec is None:
@@ -355,12 +358,14 @@ def sample_batched_many(
         (lambda keys: _spec_round(sampler, keys)) if mesh is None
         else (lambda keys: _spec_round_sharded(sampler, keys, mesh)))
     return drive_rounds(round_fn, req_keys, sampler.tree.R, n_spec=n_spec,
-                        max_trials=max_trials, grow=grow, max_spec=max_spec)
+                        max_trials=max_trials, grow=grow, max_spec=max_spec,
+                        observer=observer)
 
 
 def drive_rounds(
     round_fn, req_keys: jax.Array, r: int, *, n_spec: int,
     max_trials: int = 1000, grow: int = 2, max_spec: int = 64,
+    observer=None,
 ) -> RejectionSample:
     """Speculative-round driver shared by the static sampler and the
     dynamic-catalog sampler (``core.dynamic.sample_state_many``).
@@ -370,6 +375,14 @@ def drive_rounds(
     double-on-miss scheduling around it.  Proposal t of request i is always
     keyed ``fold_in(req_keys[i], t)``, so results are independent of the
     batching schedule and of which round function runs the proposals.
+
+    ``observer``: optional duck-typed telemetry sink — after each round's
+    designed ``device_get`` it receives ``on_round(n_active=, n_spec=,
+    proposals=, accepts=)`` and one ``on_retire(trials=, accepted=)`` per
+    request leaving the pending set, all with plain host ints (the stats
+    piggyback on arrays this loop already transfers, so observation adds
+    no sync points and cannot perturb the draws).  ``core`` stays free of
+    telemetry imports; pass e.g. ``repro.obs.RegistryObserver``.
     """
     n = req_keys.shape[0]
     items_out = np.full((n, r), -1, np.int32)
@@ -411,6 +424,11 @@ def drive_rounds(
         mask_out[hit] = mask_h[any_acc, first[any_acc]]
         trials_out[hit] = spent + first[any_acc] + 1
         acc_out[hit] = True
+        if observer is not None:
+            observer.on_round(n_active=n_act, n_spec=cur,
+                              proposals=n_act * cur, accepts=int(acc.sum()))
+            for t in trials_out[hit]:
+                observer.on_retire(trials=int(t), accepted=True)
 
         spent += cur
         miss = ~any_acc
@@ -419,6 +437,9 @@ def drive_rounds(
             items_out[left] = items_h[miss, -1]
             mask_out[left] = mask_h[miss, -1]
             trials_out[left] = spent
+            if observer is not None:
+                for _ in left:
+                    observer.on_retire(trials=spent, accepted=False)
             break
         active = active[miss]
         cur *= grow

@@ -1,0 +1,107 @@
+"""Per-request span lifecycle: submit → admit → per-tick occupancy → retire.
+
+A ``Span`` is the host-side record of one request's trip through the
+serving engine.  It owns its own ``time.perf_counter`` stamps — the
+engine never reads a clock directly (wall-clock calls inside sampling
+paths are ndpplint NDPP501/NDPP601 violations); it just calls
+``admit()``/``retire()`` at the points where it is already on the host,
+and bumps the occupancy counters (``ticks_held``, ``rounds``,
+``proposals``, ``chain_steps``) from values it already holds as Python
+ints.  No span operation touches a device array.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+def now() -> float:
+    """The one clock the serving path uses (monotonic seconds).
+
+    Centralised here so engine code contains no ``time.*`` calls — the
+    static analyzer can then enforce that sampling modules never read a
+    clock (which, inside a traced body, would measure trace time).
+    """
+    return time.perf_counter()
+
+
+@dataclasses.dataclass
+class Span:
+    """Lifecycle record for one engine request.
+
+    States: ``queued`` (constructed at submit) → ``active`` (``admit``) →
+    ``retired`` (``retire``).  Timestamps are monotonic host seconds;
+    occupancy counters are bumped by the engine at its existing
+    host-sync points.
+    """
+
+    rid: int
+    seed: int
+    backend: str
+    t_submit: float = dataclasses.field(default_factory=now)
+    t_admit: Optional[float] = None
+    t_retire: Optional[float] = None
+    slot: Optional[int] = None
+    pinned_version: Optional[int] = None
+    state: str = "queued"
+    ticks_held: int = 0       # engine ticks this request occupied a slot
+    rounds: int = 0           # speculative rounds participated in (rejection)
+    proposals: int = 0        # proposals scored within budget (rejection)
+    chain_steps: int = 0      # MH steps advanced (mcmc)
+    trials: Optional[int] = None
+    accepted: Optional[bool] = None
+
+    # ------------------------------------------------------------ transitions
+    def admit(self, slot: int, version: Optional[int] = None) -> None:
+        self.t_admit = now()
+        self.slot = slot
+        self.pinned_version = version
+        self.state = "active"
+
+    def retire(self, trials: int, accepted: bool) -> None:
+        self.t_retire = now()
+        self.trials = int(trials)
+        self.accepted = bool(accepted)
+        self.state = "retired"
+
+    # -------------------------------------------------------------- durations
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Seconds from submit to admit (None while queued)."""
+        if self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def service_time(self) -> Optional[float]:
+        """Seconds from admit to retire (None until retired)."""
+        if self.t_admit is None or self.t_retire is None:
+            return None
+        return self.t_retire - self.t_admit
+
+    @property
+    def wall(self) -> Optional[float]:
+        """End-to-end seconds from submit to retire (None until retired)."""
+        if self.t_retire is None:
+            return None
+        return self.t_retire - self.t_submit
+
+    def snapshot(self) -> dict:
+        """JSON-safe state dump (flight-recorder events, error messages)."""
+        return {
+            "rid": self.rid,
+            "seed": self.seed,
+            "backend": self.backend,
+            "state": self.state,
+            "slot": self.slot,
+            "pinned_version": self.pinned_version,
+            "ticks_held": self.ticks_held,
+            "rounds": self.rounds,
+            "proposals": self.proposals,
+            "chain_steps": self.chain_steps,
+            "trials": self.trials,
+            "accepted": self.accepted,
+            "queue_wait_s": self.queue_wait,
+            "wall_s": self.wall,
+        }

@@ -1,0 +1,44 @@
+"""jax.profiler trace-context hooks, gated by an env flag.
+
+``NDPP_PROFILE=1`` makes the engine wrap every tick dispatch in a
+``jax.profiler.TraceAnnotation`` so tick boundaries (and the backend
+that ran them) show up as named ranges in ``jax.profiler.trace`` /
+TensorBoard captures.  With the flag unset (the default, and the only
+mode CI exercises for timing) the context manager is a no-op object
+created once — zero per-tick overhead, zero profiler imports.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+PROFILE_ENV = "NDPP_PROFILE"
+
+
+def profiling_enabled() -> bool:
+    """True iff ``NDPP_PROFILE=1`` in the environment."""
+    return os.environ.get(PROFILE_ENV, "") == "1"
+
+
+class _NullContext(contextlib.AbstractContextManager):
+    """Reusable no-op context (cheaper than nullcontext() per tick)."""
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL = _NullContext()
+
+
+def tick_annotation(name: str, enabled: bool):
+    """A context manager naming one tick dispatch for the profiler.
+
+    ``enabled`` is resolved once at engine construction (from
+    ``profiling_enabled()``), not per tick — the disabled path returns a
+    shared no-op context and never imports the profiler.
+    """
+    if not enabled:
+        return _NULL
+    from jax.profiler import TraceAnnotation
+
+    return TraceAnnotation(name)

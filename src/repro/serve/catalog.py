@@ -101,11 +101,17 @@ class Catalog:
         (``models.sharding.scatter_rows_sharded`` /
         ``tree.update_rows_sharded``) and sampling runs the sharded
         rounds — all bit-identical to the unsharded catalog.
+      telemetry: ``repro.obs.Telemetry`` — every mutation batch records a
+        flight event (op, batch size, resulting version) and bumps
+        ``ndpp_catalog_mutations_total{op=...}`` plus the live item/
+        version gauges.  Host-side bookkeeping only; the mutation math is
+        untouched.
     """
 
     def __init__(self, V: jax.Array, B: jax.Array, D: jax.Array, *,
                  block: int = 64, capacity: Optional[int] = None,
-                 staleness: int = 0, mesh: Optional[Mesh] = None):
+                 staleness: int = 0, mesh: Optional[Mesh] = None,
+                 telemetry=None):
         V = jnp.asarray(V)
         B = jnp.asarray(B)
         m, k = V.shape
@@ -122,7 +128,30 @@ class Catalog:
         self._alive[:m] = True
         self._version = 0
         self._deferred = 0
+        self._tel = telemetry
+        if telemetry is not None:
+            reg = telemetry.registry
+            self._c_mut = reg.counter(
+                "ndpp_catalog_mutations_total",
+                "catalog mutation batches by operation", ("op",))
+            self._g_items = reg.gauge("ndpp_catalog_items",
+                                      "live items in the catalog")
+            self._g_cap = reg.gauge("ndpp_catalog_capacity",
+                                    "row capacity of the catalog")
         self._install(z)
+        self._note("build", m)
+
+    def _note(self, op: str, n: int, **fields):
+        """Record one mutation batch into the telemetry sinks (host-only)."""
+        if self._tel is None:
+            return
+        self._c_mut.inc(op=op)
+        self._g_items.set(self.m)
+        self._g_cap.set(self.capacity)
+        self._tel.flight.record("catalog_" + op, n=n,
+                                version=self._version, items=self.m,
+                                stale=self._snap_version != self._version,
+                                **fields)
 
     # ------------------------------------------------------------- plumbing
     def _round_capacity(self, cap: int) -> int:
@@ -215,6 +244,7 @@ class Catalog:
         ids = free[:n_new]
         self._alive[ids] = True
         self._apply(ids, z_rows, install=True)
+        self._note("insert", n_new)
         return ids
 
     def update_items(self, ids: Sequence[int], v_rows, b_rows, *,
@@ -239,6 +269,7 @@ class Catalog:
             raise ValueError(f"update of dead/unknown items: "
                              f"{ids[~self._alive[ids]].tolist()}")
         self._apply(ids, self._embed(v_rows, b_rows), install=not defer)
+        self._note("update", int(ids.size), defer=bool(defer))
 
     def delete_items(self, ids: Sequence[int]):
         """Delist items: live rows become exact zeros immediately (the
@@ -255,6 +286,7 @@ class Catalog:
         z_rows = jnp.zeros((ids.size, self._sp.Z.shape[1]),
                            self._sp.Z.dtype)
         self._apply(ids, z_rows, install=False)
+        self._note("delete", int(ids.size))
 
     def refresh(self):
         """Force the proposal snapshot back to the live proposal (ends any
@@ -262,6 +294,7 @@ class Catalog:
         self._snap = self._live_prop
         self._snap_version = self._version
         self._deferred = 0
+        self._note("refresh", 0)
 
     def _grow(self, need: int):
         """Doubling rebuild: capacity doubles until ``need`` fits, Z is
@@ -279,13 +312,15 @@ class Catalog:
         self._alive = alive
         self._version += 1
         self._install(z)
+        self._note("grow", 0, capacity=cap)
 
     # -------------------------------------------------------------- sampling
     def sample_many(self, key: jax.Array, n: int, *,
                     n_spec: Optional[int] = None, max_trials: int = 1000,
                     **kw) -> RejectionSample:
         """Draw ``n`` exact samples from the *live* kernel through the
-        current proposal snapshot (see ``core.dynamic.sample_dynamic_many``)."""
+        current proposal snapshot (see ``core.dynamic.sample_dynamic_many``;
+        ``observer=`` forwards to it for telemetry)."""
         st = self.state()
         return sample_dynamic_many(st.proposal, st.sp, key, n,
                                    n_spec=n_spec, max_trials=max_trials,

@@ -39,6 +39,7 @@ changes float drift, never the chain's exact-arithmetic trajectory.)
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Union
 
 import jax
@@ -62,7 +63,23 @@ from repro.core.rejection import (
 )
 from repro.core.tree import shard_spectral
 from repro.core.types import SpectralNDPP
+from repro.obs import Span, Telemetry, engine_instruments
 from repro.serve.catalog import Catalog, CatalogState, as_state
+
+
+class TickBudgetExhausted(RuntimeError):
+    """``run(max_ticks=...)`` ended with work still queued or in flight.
+
+    Attributes:
+      unfinished: {rid: span-state dict} for requests still holding slots.
+      queued: rids never admitted.
+    """
+
+    def __init__(self, msg: str, unfinished: Dict[int, dict],
+                 queued: List[int]):
+        super().__init__(msg)
+        self.unfinished = unfinished
+        self.queued = queued
 
 
 def _host_prng_key(seed: int) -> np.ndarray:
@@ -160,6 +177,16 @@ class SamplerEngine:
         results stay bit-identical to the unsharded engine (the
         fold_in(request_key, t) exactness guarantee is untouched).
         Requires M divisible by the mesh "model" extent.
+      telemetry: ``repro.obs.Telemetry`` — per-request spans, labelled
+        metrics, and a flight recorder of recent events.  Instrumentation
+        is free: draws are bit-identical to an uninstrumented engine, no
+        extra compiles, no extra device→host transfers (device stats are
+        piggybacked onto the arrays each tick already ``device_get``s).
+      on_exhausted: what ``run()`` does when the tick budget ends with
+        requests still queued/in flight — "raise" (default,
+        ``TickBudgetExhausted``), "warn", or "ignore" (the old silent
+        partial-result behavior).  A flight-recorder event is emitted in
+        every mode when telemetry is attached.
     """
 
     def __init__(self, sampler: Union[NDPPSampler, SpectralNDPP, Catalog,
@@ -169,9 +196,14 @@ class SamplerEngine:
                  mcmc_thin: int = 16, mcmc_steps_per_tick: Optional[int] = None,
                  mcmc_k: Optional[int] = None, mcmc_p_swap: float = 0.25,
                  mcmc_refresh_every: int = 64,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 on_exhausted: str = "raise"):
         if backend not in ("rejection", "mcmc"):
             raise ValueError(f"unknown backend {backend!r}")
+        if on_exhausted not in ("raise", "warn", "ignore"):
+            raise ValueError(f"unknown on_exhausted mode {on_exhausted!r}")
+        self.on_exhausted = on_exhausted
         self.backend = backend
         self.mesh = mesh
         self._cat: Optional[CatalogState] = None
@@ -254,10 +286,34 @@ class SamplerEngine:
         self.slot_pin: List[Optional[CatalogState]] = [None] * n_slots
         self.finished: Dict[int, SampleResult] = {}
         self.ticks = 0
+        self._tel = telemetry
+        self._spans: Dict[int, Span] = {}
+        if telemetry is not None:
+            self._m = engine_instruments(telemetry.registry)
+            # compile visibility: poll the process-wide CompileCounter
+            # after each tick so unexpected recompiles show up as a
+            # counter bump + flight event instead of silent latency
+            from repro.analysis.runtime import CompileCounter
+
+            self._cc = CompileCounter.install()
+            self._cc_seen = self._cc.count
+            telemetry.flight.record(
+                "engine_start", backend=backend, n_slots=n_slots,
+                n_spec=getattr(self, "n_spec", None),
+                catalog_version=None if self._cat is None
+                else self._cat.version)
+            if self._cat is not None:
+                self._m.catalog_version.set(self._cat.version)
 
     # ------------------------------------------------------------- frontend
     def submit(self, req: SampleRequest):
         self.queue.append(req)
+        if self._tel is not None:
+            self._spans[req.rid] = Span(rid=req.rid, seed=req.seed,
+                                        backend=self.backend)
+            self._m.submitted.inc(backend=self.backend)
+            self._m.queue_depth.set(len(self.queue))
+            self._tel.flight.record("submit", rid=req.rid, seed=req.seed)
 
     def swap_catalog(self, cat: Union[Catalog, CatalogState]):
         """Install a new catalog version between ticks — zero drain.
@@ -279,6 +335,15 @@ class SamplerEngine:
         if self.backend == "rejection" and self._cat is None:
             raise ValueError("swap_catalog on a rejection engine requires "
                              "it to have been built from a Catalog")
+        if self._tel is not None:
+            self._m.swaps.inc()
+            self._m.catalog_version.set(st.version)
+            self._tel.flight.record(
+                "catalog_swap", version=st.version,
+                from_version=None if self._cat is None
+                else self._cat.version,
+                stale=st.stale,
+                in_flight=[r.rid for r in self.slot_req if r is not None])
         self._cat = st
         self.sp = st.sp
         if self.backend == "mcmc":
@@ -310,6 +375,15 @@ class SamplerEngine:
                     st = self._init_chain_state(req.seed)
                     self._states = jax.tree_util.tree_map(
                         lambda a, v: a.at[slot].set(v), self._states, st)
+                if self._tel is not None:
+                    span = self._spans[req.rid]
+                    span.admit(slot, None if self._cat is None
+                               else self._cat.version)
+                    self._m.queue_wait.observe(span.queue_wait,
+                                               backend=self.backend)
+                    self._tel.flight.record(
+                        "admit", rid=req.rid, slot=slot, tick=self.ticks,
+                        queue_wait_s=round(span.queue_wait, 9))
 
     def _retire(self, slot: int, result: SampleResult):
         req = self.slot_req[slot]
@@ -317,14 +391,54 @@ class SamplerEngine:
         self.finished[req.rid] = result
         self.slot_req[slot] = None
         self.slot_pin[slot] = None
+        if self._tel is not None:
+            span = self._spans.pop(req.rid, None)
+            if span is not None:
+                span.retire(result.trials, result.accepted)
+                self._m.retired.inc(
+                    backend=self.backend,
+                    accepted="true" if result.accepted else "false")
+                self._m.trials_total.inc(int(result.trials),
+                                         backend=self.backend)
+                if result.accepted:
+                    self._m.request_trials.observe(int(result.trials),
+                                                   backend=self.backend)
+                self._m.latency.observe(span.wall, backend=self.backend)
+                self._m.ticks_held.observe(span.ticks_held,
+                                           backend=self.backend)
+                self._tel.flight.record(
+                    "retire", rid=req.rid, slot=slot,
+                    trials=int(result.trials),
+                    accepted=bool(result.accepted),
+                    ticks_held=span.ticks_held,
+                    wall_s=round(span.wall, 9))
 
     # ----------------------------------------------------------------- core
     def step(self) -> bool:
         """One engine tick: admit from queue, advance the whole pool with
         one jitted fixed-shape call, retire finished slots."""
-        if self.backend == "mcmc":
-            return self._step_mcmc()
-        return self._step_rejection()
+        if self._tel is None:
+            if self.backend == "mcmc":
+                return self._step_mcmc()
+            return self._step_rejection()
+        t0 = self._tel.now()
+        with self._tel.profile_tick(f"ndpp_engine_tick/{self.backend}"):
+            progressed = (self._step_mcmc() if self.backend == "mcmc"
+                          else self._step_rejection())
+        if progressed:
+            self._m.ticks.inc(backend=self.backend)
+            self._m.tick_seconds.observe(self._tel.now() - t0,
+                                         backend=self.backend)
+        self._m.slots_occupied.set(
+            sum(r is not None for r in self.slot_req))
+        self._m.queue_depth.set(len(self.queue))
+        new_compiles = self._cc.count - self._cc_seen
+        if new_compiles:
+            self._cc_seen = self._cc.count
+            self._m.compiles.inc(new_compiles)
+            self._tel.flight.record("compile", n=new_compiles,
+                                    tick=self.ticks, backend=self.backend)
+        return progressed
 
     def _step_mcmc(self) -> bool:
         """Advance every chain ``mcmc_steps_per_tick`` MH steps in one
@@ -337,25 +451,43 @@ class SamplerEngine:
         self.ticks += 1
         n_steps = self.mcmc_steps_per_tick
         if self.mesh is None:
-            states, items_tr, mask_tr, _ = mcmc_core.run_chains(
+            states, items_tr, mask_tr, acc_tr = mcmc_core.run_chains(
                 self.sp, jnp.asarray(self.slot_key), self._states,
                 n_steps=n_steps, fixed=self.mcmc_k is not None,
                 p_swap=self.mcmc_p_swap,
                 refresh_every=self.mcmc_refresh_every)
         else:
-            states, items_tr, mask_tr, _ = mcmc_core.run_chains_sharded(
+            states, items_tr, mask_tr, acc_tr = mcmc_core.run_chains_sharded(
                 self.sp, jnp.asarray(self.slot_key), self._states,
                 mesh=self.mesh, n_steps=n_steps,
                 fixed=self.mcmc_k is not None, p_swap=self.mcmc_p_swap,
                 refresh_every=self.mcmc_refresh_every)
         self._states = states
         # the designed once-per-tick device→host sync; explicit so strict
-        # transfer-guard runs see it as intentional
-        items_h, mask_h = jax.device_get((items_tr, mask_tr))  # (S, n_steps, R)
+        # transfer-guard runs see it as intentional.  Telemetry piggybacks
+        # the acceptance trace onto the same call — it is already an
+        # output of the jitted chain step, so this widens the existing
+        # sync, never adds one (and never changes the compiled program).
+        if self._tel is None:
+            items_h, mask_h = jax.device_get((items_tr, mask_tr))  # (S, n_steps, R)
+        else:
+            items_h, mask_h, acc_h = jax.device_get(
+                (items_tr, mask_tr, acc_tr))
+        occupied = [s for s in range(self.n_slots)
+                    if self.slot_req[s] is not None]
+        if self._tel is not None:
+            frac = float(np.mean(acc_h[occupied]))
+            self._m.mcmc_accept.observe(frac)
+            self._m.mcmc_steps.inc(n_steps * len(occupied))
+            self._m.proposals.inc(n_steps * len(occupied), backend="mcmc")
+            self._m.accepts.inc(int(np.sum(acc_h[occupied])),
+                                backend="mcmc")
         target = self.mcmc_burn_in + self.mcmc_thin
-        for slot in range(self.n_slots):
-            if self.slot_req[slot] is None:
-                continue
+        for slot in occupied:
+            if self._tel is not None:
+                span = self._spans[self.slot_req[slot].rid]
+                span.ticks_held += 1
+                span.chain_steps += n_steps
             before = int(self.slot_trials[slot])
             self.slot_trials[slot] = before + n_steps
             if before + n_steps >= target:
@@ -425,6 +557,8 @@ class SamplerEngine:
         acc = acc.reshape(self.n_slots, self.n_spec)
         items_h = items_h.reshape(self.n_slots, self.n_spec, r)
         mask_h = mask_h.reshape(self.n_slots, self.n_spec, r)
+        round_proposals = 0
+        round_accepts = 0
         for slot in slots:
             req = self.slot_req[slot]
             # only proposals inside the request's max_trials budget count,
@@ -433,6 +567,13 @@ class SamplerEngine:
             remaining = int(req.max_trials - self.slot_trials[slot])
             usable = min(self.n_spec, remaining)
             row = acc[slot, :usable]
+            if self._tel is not None:
+                span = self._spans[req.rid]
+                span.ticks_held += 1
+                span.rounds += 1
+                span.proposals += usable
+                round_proposals += usable
+                round_accepts += int(row.sum())
             if row.any():
                 first = int(row.argmax())
                 self._retire(slot, SampleResult(
@@ -448,12 +589,77 @@ class SamplerEngine:
                         mask=mask_h[slot, usable - 1],
                         trials=int(self.slot_trials[slot]), accepted=False,
                     ))
+        if self._tel is not None:
+            self._m.rounds.inc(backend=self.backend)
+            self._m.proposals.inc(round_proposals, backend=self.backend)
+            self._m.accepts.inc(round_accepts, backend=self.backend)
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, SampleResult]:
         """Drain the queue; returns {rid: SampleResult} for every retired
-        request (recorded at retire time, not collected from slots)."""
+        request (recorded at retire time, not collected from slots).
+
+        If the tick budget runs out with requests still queued or in
+        flight, raises ``TickBudgetExhausted`` listing the unfinished
+        request ids and their span state (``on_exhausted="warn"`` demotes
+        this to a ``RuntimeWarning``, ``"ignore"`` restores the old
+        silent partial-result behavior); with telemetry attached a
+        ``tick_budget_exhausted`` flight event is recorded first and the
+        recorder is dumped to ``Telemetry.dump_on_error`` if configured.
+        """
         for _ in range(max_ticks):
             progressed = self.step()
             if not progressed and not self.queue:
                 break
+        if self.queue or any(r is not None for r in self.slot_req):
+            self._report_exhausted(max_ticks)
         return dict(self.finished)
+
+    def _report_exhausted(self, max_ticks: int):
+        unfinished: Dict[int, dict] = {}
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            span = self._spans.get(req.rid)
+            unfinished[req.rid] = (
+                span.snapshot() if span is not None
+                else {"rid": req.rid, "state": "active", "slot": slot,
+                      "trials": int(self.slot_trials[slot])})
+        queued = [req.rid for req in self.queue]
+        if self._tel is not None:
+            self._tel.flight.record(
+                "tick_budget_exhausted", max_ticks=max_ticks,
+                in_flight=sorted(unfinished), queued=queued,
+                spans=list(unfinished.values()))
+            self._tel.on_error()
+        if self.on_exhausted == "ignore":
+            return
+        msg = (f"run(max_ticks={max_ticks}) exhausted the tick budget with "
+               f"{len(unfinished)} request(s) still in flight "
+               f"(rids {sorted(unfinished)}, span state {unfinished}) and "
+               f"{len(queued)} still queued (rids {queued})")
+        if self.on_exhausted == "warn":
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
+            return
+        raise TickBudgetExhausted(msg, unfinished=unfinished, queued=queued)
+
+    # ------------------------------------------------------------ telemetry
+    def stats(self) -> dict:
+        """Point-in-time engine snapshot (cheap, host-only).
+
+        Always includes pool/queue occupancy; with telemetry attached,
+        adds the full metric snapshot and flight-recorder depth.
+        """
+        out = {
+            "backend": self.backend,
+            "ticks": self.ticks,
+            "queue_depth": len(self.queue),
+            "in_flight": sum(r is not None for r in self.slot_req),
+            "finished": len(self.finished),
+        }
+        if self._cat is not None:
+            out["catalog_version"] = self._cat.version
+        if self._tel is not None:
+            out["metrics"] = self._tel.registry.snapshot()
+            out["flight_events"] = len(self._tel.flight)
+            out["flight_dropped"] = self._tel.flight.dropped
+        return out

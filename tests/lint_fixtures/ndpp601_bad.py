@@ -1,0 +1,21 @@
+"""Fixture: NDPP601 — wall-clock reads inside jit-traced bodies execute
+at trace time, so they measure tracing (once per compile), not runtime.
+(The clock calls also trip NDPP501: fixtures count as sampling paths.)"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def score_with_latency(x):
+    t0 = time.perf_counter()  # EXPECT: NDPP601  # EXPECT: NDPP501
+    y = jnp.dot(x, x)
+    dt = time.perf_counter() - t0  # EXPECT: NDPP601  # EXPECT: NDPP501
+    return y, dt
+
+
+@jax.jit
+def stamped_round(keys):
+    stamp = time.time()  # EXPECT: NDPP601  # EXPECT: NDPP501
+    return keys.sum() + stamp

@@ -1,0 +1,21 @@
+"""Clean twin of ndpp601_bad: the jitted call stays clock-free and the
+host times around it (``repro.obs.now`` — the serving stack's one clock)
+after the explicit device_get, so the histogram sees runtime, not trace
+time."""
+import jax
+import jax.numpy as jnp
+
+from repro.obs import MetricRegistry, now
+
+
+@jax.jit
+def score(x):
+    return jnp.dot(x, x)
+
+
+def timed_score(registry: MetricRegistry, x):
+    hist = registry.histogram("score_seconds", start=1e-6)
+    t0 = now()
+    y = jax.device_get(score(x))
+    hist.observe(now() - t0)
+    return y

@@ -1,0 +1,28 @@
+"""Fixture: NDPP602 — metric recording inside a traced body fires once
+per compile with tracer arguments (the counter sees an abstract value,
+and re-running the compiled program records nothing)."""
+import jax
+import jax.numpy as jnp
+
+import repro.obs
+from repro.obs import MetricRegistry
+
+REG = MetricRegistry()
+ACCEPTS = REG.counter("accepts_total")
+RATIO = REG.histogram("accept_ratio", start=1e-3)
+
+
+@jax.jit
+def accept_and_count(logdet_num, logdet_den, u):
+    ratio = jnp.exp(logdet_num - logdet_den)
+    ACCEPTS.inc(jnp.sum(u < ratio))  # EXPECT: NDPP602
+    RATIO.observe(ratio.mean())  # EXPECT: NDPP602
+    return u < ratio
+
+
+@jax.jit
+def traced_latency(x):
+    t0 = repro.obs.now()  # EXPECT: NDPP602
+    y = x * 2.0
+    dt = repro.obs.now() - t0  # EXPECT: NDPP602
+    return y, dt

@@ -1,0 +1,25 @@
+"""Clean twin of ndpp602_bad: the jitted round *returns* its statistics
+as arrays, the host harvests them with the designed ``jax.device_get``,
+and metrics record concrete Python numbers — per call, never per
+compile."""
+import jax
+import jax.numpy as jnp
+
+from repro.obs import MetricRegistry
+
+REG = MetricRegistry()
+ACCEPTS = REG.counter("accepts_total")
+RATIO = REG.histogram("accept_ratio", start=1e-3)
+
+
+@jax.jit
+def accept_round(logdet_num, logdet_den, u):
+    ratio = jnp.exp(logdet_num - logdet_den)
+    return u < ratio, ratio
+
+
+def count_round(logdet_num, logdet_den, u):
+    acc, ratio = jax.device_get(accept_round(logdet_num, logdet_den, u))
+    ACCEPTS.inc(int(acc.sum()))
+    RATIO.observe(float(ratio.mean()))
+    return acc

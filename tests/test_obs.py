@@ -1,0 +1,383 @@
+"""Telemetry subsystem tests (PR 7).
+
+Three layers: (1) metric primitives — exact log-bucket edges, merges,
+percentiles checked against numpy; (2) the flight recorder ring; (3) the
+acceptance property that instrumentation is *free* — a fully
+instrumented engine produces bit-identical draws to a bare one on both
+backends (compile-freeness is asserted in tests/test_compile_cache.py),
+plus the ``run()`` tick-budget bugfix and catalog/swap event coverage.
+
+The whole module is in the strict marker set: under ``NDPP_STRICT=1``
+every telemetry path must survive the transfer guard — recording metrics
+may never trigger an implicit device→host sync.
+"""
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import preprocess
+from repro.obs import (
+    FlightRecorder,
+    LogHistogram,
+    MetricRegistry,
+    RegistryObserver,
+    Span,
+    Telemetry,
+)
+from repro.serve.sampler_engine import (
+    SampleRequest,
+    SamplerEngine,
+    TickBudgetExhausted,
+)
+
+pytestmark = pytest.mark.strict
+
+M, K = 32, 4
+
+
+@pytest.fixture(scope="module")
+def sampler():
+    import jax.numpy as jnp
+
+    r = np.random.default_rng(7)
+    v = jnp.asarray(r.normal(size=(M, K)) * 0.6, jnp.float32)
+    b = jnp.asarray(r.normal(size=(M, K)) * 0.6, jnp.float32)
+    d = jnp.asarray(r.normal(size=(K, K)), jnp.float32)
+    return preprocess(v, b, d, block=4)
+
+
+# ---------------------------------------------------------------- histograms
+def test_histogram_exact_bucket_edges():
+    h = LogHistogram(start=1.0, factor=2.0)
+    # exact powers of two land in the bucket they open, never below
+    assert h.bucket_index(1.0) == 0
+    assert h.bucket_index(2.0) == 1
+    assert h.bucket_index(4.0) == 2
+    assert h.bucket_index(3.999999) == 1
+    assert h.bucket_index(0.5) == -1
+    lo, hi = h.bucket_edges(3)
+    assert (lo, hi) == (8.0, 16.0)
+
+
+@pytest.mark.parametrize("factor", [2.0, 2 ** 0.5, 2 ** 0.25, 10.0])
+def test_histogram_index_consistent_with_edges(factor):
+    """bucket_index must agree with bucket_edges on the edge lattice
+    itself — the float log/floor estimate is snapped, so an exact edge
+    value always opens its own bucket."""
+    h = LogHistogram(start=1e-5, factor=factor)
+    for i in range(-40, 41):
+        lo, hi = h.bucket_edges(i)
+        assert h.bucket_index(lo) == i
+        got = h.bucket_index(math.nextafter(hi, 0.0))
+        assert got == i, f"just-below-hi landed in {got}, want {i}"
+
+
+def test_histogram_merge_exact():
+    r = np.random.default_rng(0)
+    a_vals = r.lognormal(0.0, 2.0, size=200)
+    b_vals = r.lognormal(1.0, 1.0, size=300)
+    a = LogHistogram(1e-6, 2.0)
+    b = LogHistogram(1e-6, 2.0)
+    both = LogHistogram(1e-6, 2.0)
+    for v in a_vals:
+        a.observe(v)
+        both.observe(v)
+    for v in b_vals:
+        b.observe(v)
+        both.observe(v)
+    m = a.merge(b)
+    assert m.counts == both.counts
+    assert m.count == both.count == 500
+    assert m.total == pytest.approx(both.total)
+    assert (m.vmin, m.vmax) == (both.vmin, both.vmax)
+    with pytest.raises(ValueError):
+        a.merge(LogHistogram(1e-6, 4.0))
+
+
+@pytest.mark.parametrize("q", [0.0, 10.0, 50.0, 90.0, 99.0, 100.0])
+def test_histogram_percentile_vs_numpy(q):
+    """Bucket-resolution percentile: the estimate brackets the exact
+    nearest-rank value within one bucket factor, and p100 is exact."""
+    r = np.random.default_rng(1)
+    vals = r.lognormal(-3.0, 2.5, size=2000)
+    factor = 2 ** 0.25
+    h = LogHistogram(start=1e-6, factor=factor)
+    for v in vals:
+        h.observe(v)
+    exact = np.sort(vals)[max(1, math.ceil(q / 100.0 * vals.size)) - 1]
+    got = h.percentile(q)
+    assert exact <= got <= exact * factor + 1e-12
+    assert h.percentile(100.0) == vals.max()
+    assert h.mean() == pytest.approx(vals.mean())
+
+
+def test_histogram_underflow_and_empty():
+    h = LogHistogram(start=1.0, factor=2.0)
+    assert math.isnan(h.percentile(50))
+    tiny = 2.0 ** -80            # below start * factor**-64
+    h.observe(tiny)
+    h.observe(8.0)
+    assert h.underflow == 1
+    assert h.count == 2
+    assert h.percentile(0) == tiny      # underflow resolves to vmin
+    assert h.percentile(100) == 8.0
+    with pytest.raises(ValueError):
+        h.percentile(101)
+    with pytest.raises(ValueError):
+        LogHistogram(start=0.0)
+    with pytest.raises(ValueError):
+        LogHistogram(factor=1.0)
+
+
+# ------------------------------------------------------ registry + exporters
+def test_registry_labels_and_expose():
+    reg = MetricRegistry()
+    c = reg.counter("req_total", "requests", labels=("backend",))
+    c.inc(backend="rejection")
+    c.inc(2, backend="mcmc")
+    assert c.value(backend="rejection") == 1
+    assert c.total() == 3
+    with pytest.raises(ValueError):
+        c.inc(backend="rejection", extra="nope")
+    with pytest.raises(ValueError):
+        c.inc(-1, backend="mcmc")
+    g = reg.gauge("depth")
+    g.set(4)
+    h = reg.histogram("lat", "latency", labels=("backend",),
+                      start=1e-3, factor=2.0)
+    h.observe(0.25, backend="rejection")
+    h.observe(0.5, backend="rejection")
+    text = reg.expose()
+    assert '# TYPE req_total counter' in text
+    assert 'req_total{backend="mcmc"} 2' in text
+    assert "depth 4" in text
+    assert '# TYPE lat histogram' in text
+    assert 'lat_bucket{backend="rejection",le="0.256"} 1' in text
+    assert 'lat_bucket{backend="rejection",le="0.512"} 2' in text
+    assert 'lat_bucket{backend="rejection",le="+Inf"} 2' in text
+    assert 'lat_count{backend="rejection"} 2' in text
+    # get-or-create is idempotent; schema conflicts are errors
+    assert reg.counter("req_total", labels=("backend",)) is c
+    with pytest.raises(ValueError):
+        reg.gauge("req_total")
+    with pytest.raises(ValueError):
+        reg.counter("req_total", labels=("other",))
+    with pytest.raises(ValueError):
+        reg.histogram("lat", labels=("backend",), start=1.0, factor=2.0)
+    snap = reg.snapshot()
+    assert snap["req_total"]["values"]["backend=mcmc"] == 2
+    assert snap["lat"]["values"]["backend=rejection"]["count"] == 2
+    json.dumps(snap)  # snapshot must be JSON-safe as-is
+
+
+def test_flight_recorder_ring_and_dump(tmp_path):
+    fr = FlightRecorder(capacity=4)
+    for i in range(7):
+        fr.record("tick", n=i)
+    assert len(fr) == 4
+    assert fr.total == 7
+    assert fr.dropped == 3
+    assert [e["n"] for e in fr.events()] == [3, 4, 5, 6]
+    assert [e["seq"] for e in fr.events()] == [3, 4, 5, 6]
+    fr.record("retire", rid=1, trials=np.int64(9))  # numpy must serialize
+    path = tmp_path / "flight.jsonl"
+    assert fr.dump(str(path)) == 4
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert lines[-1]["event"] == "retire" and lines[-1]["trials"] == 9
+    assert [e["event"] for e in fr.events("retire")] == ["retire"]
+    # monotone within the buffer
+    ts = [e["t"] for e in fr.events()]
+    assert ts == sorted(ts)
+
+
+def test_span_lifecycle():
+    s = Span(rid=3, seed=7, backend="rejection")
+    assert s.state == "queued" and s.queue_wait is None and s.wall is None
+    s.admit(slot=2, version=5)
+    assert s.state == "active" and s.queue_wait >= 0
+    s.ticks_held += 2
+    s.retire(trials=9, accepted=True)
+    assert s.state == "retired"
+    assert s.wall >= s.queue_wait
+    snap = s.snapshot()
+    assert snap["pinned_version"] == 5 and snap["trials"] == 9
+    json.dumps(snap)
+
+
+# ------------------------------------------------- instrumentation is free
+def _drain(sampler, telemetry, n=12, **kw):
+    eng = SamplerEngine(sampler, n_slots=4, telemetry=telemetry, **kw)
+    for i in range(n):
+        eng.submit(SampleRequest(rid=i, seed=i, max_trials=200))
+    return eng, eng.run()
+
+
+def test_rejection_draws_bit_identical_with_metrics(sampler):
+    tel = Telemetry()
+    _, bare = _drain(sampler, None)
+    eng, inst = _drain(sampler, tel)
+    assert sorted(bare) == sorted(inst)
+    for rid in bare:
+        assert np.array_equal(bare[rid].items, inst[rid].items)
+        assert np.array_equal(bare[rid].mask, inst[rid].mask)
+        assert bare[rid].trials == inst[rid].trials
+        assert bare[rid].accepted == inst[rid].accepted
+    # the registry really filled, and agrees with ground truth
+    reg = tel.registry
+    assert reg.get("ndpp_requests_retired_total").total() == len(bare)
+    lat = reg.get("ndpp_request_latency_seconds").data(backend="rejection")
+    assert lat.count == len(bare) and lat.vmin > 0
+    n_acc = sum(r.accepted for r in bare.values())
+    tri = reg.get("ndpp_request_trials").data(backend="rejection")
+    assert tri.count == n_acc
+    assert tri.total == sum(r.trials for r in bare.values() if r.accepted)
+    ev = [e["event"] for e in tel.flight.events()]
+    assert ev.count("submit") == len(bare) == ev.count("retire")
+    st = eng.stats()
+    assert st["finished"] == len(bare) and "metrics" in st
+
+
+def test_mcmc_draws_bit_identical_with_metrics(sampler):
+    tel = Telemetry()
+    kw = dict(backend="mcmc", mcmc_burn_in=32, mcmc_thin=8, n=6)
+    _, bare = _drain(sampler, None, **kw)
+    _, inst = _drain(sampler, tel, **kw)
+    for rid in bare:
+        assert np.array_equal(bare[rid].items, inst[rid].items)
+        assert np.array_equal(bare[rid].mask, inst[rid].mask)
+    frac = tel.registry.get("ndpp_mcmc_accept_fraction").data()
+    assert frac.count > 0 and 0.0 <= frac.vmax <= 1.0
+    assert tel.registry.get("ndpp_mcmc_steps_total").total() > 0
+
+
+def test_observer_matches_returned_trials(sampler):
+    """RegistryObserver through sample_batched_many: the histogram must
+    reproduce the exact trial counts the sampler returns."""
+    import jax
+
+    reg = MetricRegistry()
+    res = jax.device_get(
+        __import__("repro.core.rejection", fromlist=["x"]).sample_batched_many(
+            sampler, jax.random.PRNGKey(3), 16, max_trials=400,
+            observer=RegistryObserver(reg)))
+    tri = reg.get("ndpp_request_trials").data(backend="rejection")
+    acc = res.accepted
+    assert tri.count == int(acc.sum())
+    assert tri.total == float(res.trials[acc].sum())
+    assert reg.get("ndpp_trials_total").total() == float(res.trials.sum())
+    # per-round accounting is self-consistent
+    assert (reg.get("ndpp_proposals_total").total()
+            >= reg.get("ndpp_accepts_total").total())
+
+
+# ------------------------------------------------- run() tick-budget bugfix
+def test_run_exhausted_raises_with_span_state(sampler, tmp_path):
+    dump = tmp_path / "flight.jsonl"
+    tel = Telemetry(dump_on_error=str(dump))
+    # MCMC needs burn_in+thin steps per request, so one 16-step tick
+    # deterministically leaves every admitted chain in flight
+    eng = SamplerEngine(sampler, n_slots=2, telemetry=tel, backend="mcmc",
+                        mcmc_burn_in=64, mcmc_thin=8,
+                        mcmc_steps_per_tick=16)
+    for i in range(8):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    with pytest.raises(TickBudgetExhausted) as ei:
+        eng.run(max_ticks=1)
+    err = ei.value
+    assert err.unfinished and err.queued
+    for state in err.unfinished.values():
+        assert state["state"] == "active" and state["ticks_held"] >= 1
+    assert set(err.unfinished).isdisjoint(err.queued)
+    # flight event emitted and recorder dumped to the error path
+    ev = tel.flight.events("tick_budget_exhausted")
+    assert len(ev) == 1 and ev[0]["queued"] == err.queued
+    assert dump.exists()
+    assert any(json.loads(l)["event"] == "tick_budget_exhausted"
+               for l in dump.read_text().splitlines())
+
+
+def test_run_exhausted_warn_and_ignore(sampler):
+    eng = SamplerEngine(sampler, n_slots=2, on_exhausted="warn")
+    for i in range(8):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        partial = eng.run(max_ticks=1)
+    assert len(w) == 1 and issubclass(w[0].category, RuntimeWarning)
+    assert "still queued" in str(w[0].message)
+    assert len(partial) < 8          # the old silent behavior, now opt-in
+
+    eng = SamplerEngine(sampler, n_slots=2, on_exhausted="ignore")
+    for i in range(8):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.run(max_ticks=1)         # must not warn or raise
+
+    with pytest.raises(ValueError):
+        SamplerEngine(sampler, on_exhausted="explode")
+
+
+def test_run_completes_cleanly_never_raises(sampler):
+    eng = SamplerEngine(sampler, n_slots=4)
+    for i in range(6):
+        eng.submit(SampleRequest(rid=i, seed=i, max_trials=200))
+    out = eng.run()                  # default on_exhausted="raise"
+    assert len(out) == 6
+
+
+# --------------------------------------------------------- catalog events
+def test_catalog_mutations_and_swap_events():
+    from repro.serve.catalog import Catalog
+
+    r = np.random.default_rng(11)
+    v = (r.normal(size=(24, K)) * 0.5).astype(np.float32)
+    b = (r.normal(size=(24, K)) * 0.5).astype(np.float32)
+    d = r.normal(size=(K, K)).astype(np.float32)
+    tel = Telemetry()
+    cat = Catalog(v, b, d, block=4, staleness=2, telemetry=tel)
+    ids = cat.insert_items(v[:3] * 0.9, b[:3] * 0.9)
+    cat.update_items(ids[:2], v[:2] * 0.8, b[:2] * 0.8)
+    cat.delete_items(ids[:1])
+    cat.refresh()
+    ops = [e["event"] for e in tel.flight.events()]
+    for want in ("catalog_build", "catalog_insert", "catalog_update",
+                 "catalog_delete", "catalog_refresh"):
+        assert want in ops, f"missing {want} in {ops}"
+    mut = tel.registry.get("ndpp_catalog_mutations_total")
+    assert mut.value(op="insert") == 1
+    assert tel.registry.get("ndpp_catalog_items").value() == cat.m
+
+    # engine swap event carries version provenance and in-flight rids
+    eng = SamplerEngine(cat, n_slots=2, telemetry=tel)
+    for i in range(4):
+        eng.submit(SampleRequest(rid=i, seed=i, max_trials=400))
+    cat.insert_items(v[:1] * 0.7, b[:1] * 0.7)
+    old_v = eng._cat.version
+    eng.swap_catalog(cat)
+    swaps = tel.flight.events("catalog_swap")
+    assert len(swaps) == 1
+    assert swaps[0]["from_version"] == old_v
+    assert swaps[0]["version"] == cat.version > old_v
+    assert tel.registry.get("ndpp_catalog_version").value() == cat.version
+    eng.run()
+    assert len(eng.finished) == 4
+
+
+# ----------------------------------------------------------- profiler gate
+def test_profile_gate_defaults_off(monkeypatch):
+    from repro.obs import trace
+
+    monkeypatch.delenv(trace.PROFILE_ENV, raising=False)
+    assert Telemetry().profile is False
+    monkeypatch.setenv(trace.PROFILE_ENV, "1")
+    assert Telemetry().profile is True
+    # disabled annotations are a shared no-op object — no profiler import
+    tel = Telemetry(profile=False)
+    cm = tel.profile_tick("tick/rejection")
+    with cm:
+        pass
+    assert cm is tel.profile_tick("tick/other")
