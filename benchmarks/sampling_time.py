@@ -466,6 +466,138 @@ def run_catalog(ms: List[int] = None, k: int = 32, batch: int = 64,
     return rows
 
 
+def run_serve(ms: List[int] = None, k: int = 32, n_requests: int = 96,
+              n_spec: int = None, out_rows: List[Dict] = None,
+              smoke: bool = False):
+    """Front-door serving under sustained load (PR 8).
+
+    Drives the admission scheduler (``serve.scheduler``) over a
+    rejection + MCMC pool pair with a seeded Poisson-ish arrival stream
+    on the real clock: exponential inter-arrival gaps at a target QPS
+    derived from a capacity probe (a full-queue drain of the same pools),
+    per-request deadlines, and continuous batching refilling freed slots
+    every tick.  Committed fields per row: offered/achieved QPS,
+    end-to-end latency p50/p99 (front-door submit → retire, off the
+    engine's registry histogram), queue-wait p99, shed rate — plus the
+    SLO targets, asserted *in-bench* so a regression fails the run
+    instead of committing a bad row.
+    """
+    from repro.obs import now as wall_now
+    from repro.serve.sampler_engine import SamplerEngine
+    from repro.serve.scheduler import Scheduler, ServeRequest
+
+    if smoke:
+        ms = ms or [2 ** 10]
+        n_requests = min(n_requests, 16)
+    ms = ms or [2 ** 12]
+    # loose SLOs: CPU CI hosts are noisy — these catch collapses (a
+    # serialization bug, a per-tick recompile), not few-ms drifts
+    slo = dict(latency_p99_ms=5000.0, max_shed_rate=0.25,
+               min_achieved_frac=0.5)
+    mcmc_kw = dict(backend="mcmc", mcmc_burn_in=64, mcmc_thin=8,
+                   mcmc_steps_per_tick=64)
+    rows = []
+    for m in ms:
+        v, b, d = synthetic_features(m, k // 2, seed=0)
+        scale = 1.0 / np.sqrt(m)
+        v, b = v * scale, b * scale
+        sampler = preprocess(v, b, d, block=64)
+        spec = n_spec if n_spec is not None else auto_n_spec(sampler)
+
+        def build_sched(telemetry=None):
+            pools = {
+                "rej": SamplerEngine(sampler, n_slots=8, n_spec=spec,
+                                     telemetry=telemetry),
+                "mcmc": SamplerEngine(sampler, n_slots=4,
+                                      telemetry=telemetry, **mcmc_kw),
+            }
+            return Scheduler(pools, max_queue=4 * n_requests,
+                             telemetry=telemetry)
+
+        # capacity probe: drain the full request mix queued at t=0 (after
+        # a small warmup so jit compiles don't count as capacity)
+        def mix(i):  # ~1 in 5 requests pinned to the MCMC pool
+            return "mcmc" if i % 5 == 4 else "rej"
+
+        probe = build_sched()
+        for i in range(8):
+            probe.submit(ServeRequest(rid=i, seed=i, pool=mix(i)))
+        probe.run(max_ticks=20_000)
+        t0 = wall_now()
+        for i in range(8, 8 + n_requests):
+            probe.submit(ServeRequest(rid=i, seed=i, pool=mix(i)))
+        probe.run(max_ticks=50_000)
+        cap_qps = n_requests / max(wall_now() - t0, 1e-9)
+
+        for load_frac in ((0.5,) if smoke else (0.4, 0.8)):
+            offered = load_frac * cap_qps
+            rng = np.random.default_rng(int(m) + int(load_frac * 100))
+            arrive = np.cumsum(rng.exponential(1.0 / offered,
+                                               size=n_requests))
+            tel = Telemetry()
+            sched = build_sched(tel)
+            deadline_s = 60.0          # generous: sheds mean collapse
+            t0 = wall_now()
+            i = 0
+            while i < n_requests or sched.busy():
+                t = wall_now() - t0
+                while i < n_requests and arrive[i] <= t:
+                    sched.submit(ServeRequest(
+                        rid=i, seed=i, pool=mix(i),
+                        deadline=t0 + arrive[i] + deadline_s))
+                    i += 1
+                if sched.busy():
+                    sched.tick()
+                elif i < n_requests:
+                    time.sleep(min(1e-3, max(0.0, arrive[i] - t)))
+            wall = wall_now() - t0
+
+            outs = sched.outcomes
+            n_done = sum(o.status == "done" for o in outs.values())
+            n_shed = sum(o.status == "shed" for o in outs.values())
+            lat_h = tel.registry.get("ndpp_request_latency_seconds")
+            lat = lat_h.data(backend="rejection").merge(
+                lat_h.data(backend="mcmc"))
+            qw = tel.registry.get("ndpp_sched_queue_wait_seconds").data()
+            row = dict(
+                M=m, K=k, n_requests=n_requests, n_spec=spec,
+                load_frac=load_frac,
+                capacity_qps=cap_qps, offered_qps=offered,
+                achieved_qps=n_done / max(wall, 1e-9),
+                latency_p50_ms=lat.percentile(50) * 1e3,
+                latency_p99_ms=lat.percentile(99) * 1e3,
+                queue_wait_p99_ms=qw.percentile(99) * 1e3,
+                shed_rate=n_shed / n_requests,
+                ticks=sched.ticks,
+                slo=dict(slo),
+            )
+            row["slo_ok"] = bool(
+                row["latency_p99_ms"] <= slo["latency_p99_ms"]
+                and row["shed_rate"] <= slo["max_shed_rate"]
+                and row["achieved_qps"]
+                >= slo["min_achieved_frac"] * offered)
+            rows.append(row)
+            print(
+                f"M=2^{int(np.log2(m)):2d} load={load_frac:.1f} "
+                f"offered={offered:7.1f}/s achieved="
+                f"{row['achieved_qps']:7.1f}/s p50/p99="
+                f"{row['latency_p50_ms']:7.1f}/"
+                f"{row['latency_p99_ms']:7.1f}ms "
+                f"qwait p99={row['queue_wait_p99_ms']:7.1f}ms "
+                f"shed={row['shed_rate']:.2%} "
+                f"{'SLO OK' if row['slo_ok'] else 'SLO VIOLATED'}"
+            )
+            assert row["slo_ok"], (
+                "serve row violates its SLO — front-door latency or shed "
+                "rate collapsed", row)
+            assert n_done + n_shed == n_requests and lat.count == n_done, (
+                "request accounting broke: every request must retire or "
+                "shed exactly once", n_done, n_shed)
+            if out_rows is not None:
+                out_rows.append(row)
+    return rows
+
+
 def run_learned(k: int = 4, n_requests: int = 64, smoke: bool = False):
     """Learned-kernel rejection rates: ONDPP vs unconstrained NDPP on the
     same basket data (the paper's Section 5 argument, measured).
@@ -595,7 +727,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=["latency", "batched", "mcmc", "sharded",
-                             "catalog", "learned", "both", "all"],
+                             "catalog", "learned", "serve", "both", "all"],
                     default="both")
     ap.add_argument("--n-requests", type=int, default=64)
     ap.add_argument("--n-spec", type=int, default=None,
@@ -615,9 +747,10 @@ if __name__ == "__main__":
         "sharded": ("sharded",),
         "catalog": ("catalog",),
         "learned": ("learned",),
+        "serve": ("serve",),
         "both": ("latency", "batched"),
         "all": ("latency", "batched", "mcmc", "sharded", "catalog",
-                "learned"),
+                "learned", "serve"),
     }[args.mode]
     if "sharded" in modes and args.devices > 1:
         # must land before the first jax backend touch in this process;
@@ -648,6 +781,9 @@ if __name__ == "__main__":
     if "learned" in modes:
         results["learned"] = run_learned(n_requests=args.n_requests,
                                          smoke=args.smoke)
+    if "serve" in modes:
+        results["serve"] = run_serve(n_requests=args.n_requests,
+                                     n_spec=args.n_spec, smoke=args.smoke)
     if args.out:
         # merge into any existing file so a partial-mode run never drops
         # another mode's tracked rows (e.g. `--mode batched` keeps the
@@ -690,5 +826,15 @@ if __name__ == "__main__":
                     lrow["measured_trials"] <= lrow["rank_bound"], (
                         "committed ONDPP row must carry its trials "
                         "histogram and sit under the Theorem 2 bound", lrow)
+        # PR 8: committed serve rows must carry the front-door SLO fields
+        # and have passed their in-bench SLO assertion
+        for srow in committed.get("serve", []):
+            missing = {"offered_qps", "achieved_qps", "latency_p50_ms",
+                       "latency_p99_ms", "shed_rate", "slo",
+                       "slo_ok"} - set(srow)
+            assert not missing, (
+                "committed serve row lacks SLO fields", missing)
+            assert srow["slo_ok"] is True, (
+                "committed serve row violates its own SLO", srow)
         print("smoke: committed BENCH rows carry registry "
-              "histogram/percentile fields")
+              "histogram/percentile fields and serve SLO columns")

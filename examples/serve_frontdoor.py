@@ -1,0 +1,108 @@
+"""Async serving front door — continuous batching over two sampler pools.
+
+Builds a `Scheduler` over a rejection pool and an MCMC pool, wraps it in
+the asyncio `FrontDoor`, and drives it three ways:
+  * a burst of concurrent `door.sample()` callers with mixed priorities
+    and deadlines (some shed under pressure — that is the point),
+  * the in-process RPC path (`door.handle_rpc`, same JSON as HTTP),
+  * the stdlib HTTP adapter: POST /v1/sample, GET /v1/metrics, /v1/stats.
+
+Draws are bit-identical to submitting the same (rid, seed) pairs
+directly to a `SamplerEngine` — the scheduler only decides *when* a
+request runs, never *what* it samples (see docs/serving.md).
+
+Run:  PYTHONPATH=src python examples/serve_frontdoor.py [--n 24]
+"""
+import argparse
+import asyncio
+import json
+import threading
+import urllib.request
+
+from repro.core import preprocess
+from repro.data.baskets import synthetic_features
+from repro.obs import Telemetry
+from repro.serve.frontdoor import FrontDoor, ShedError, serve_http
+from repro.serve.sampler_engine import SamplerEngine
+from repro.serve.scheduler import Scheduler
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=24)
+ap.add_argument("--items", type=int, default=128)
+args = ap.parse_args()
+
+V, B, D = synthetic_features(args.items, 8, seed=0)
+V, B = V / 8.0, B / 8.0
+sampler = preprocess(V, B, D, block=8)
+
+
+def build_door():
+    tel = Telemetry()
+    pools = {
+        "rej": SamplerEngine(sampler, n_slots=4, n_spec=8, telemetry=tel),
+        "mcmc": SamplerEngine(sampler, backend="mcmc", n_slots=2,
+                              mcmc_burn_in=64, mcmc_thin=8,
+                              mcmc_steps_per_tick=64, telemetry=tel),
+    }
+    return FrontDoor(Scheduler(pools, max_queue=2 * args.n, telemetry=tel,
+                               autoscale_n_spec=True,
+                               target_queue_wait=0.05))
+
+
+async def one(door, i):
+    try:
+        res = await door.sample(
+            seed=100 + i,
+            priority=i % 3,
+            pool="mcmc" if i % 5 == 4 else None,     # 1 in 5 pinned
+            deadline_in=0.002 if i % 7 == 6 else None,  # some very tight
+        )
+        return "done", int(res.items.shape[0] if res.items.ndim else 0)
+    except ShedError as e:
+        return f"shed({e.outcome.reason})", None
+
+
+async def main():
+    async with build_door() as door:
+        # concurrent native callers
+        outs = await asyncio.gather(*[one(door, i) for i in range(args.n)])
+        done = sum(1 for s, _ in outs if s == "done")
+        print(f"native: {done}/{args.n} served, "
+              f"{args.n - done} shed under deadline pressure")
+
+        # in-process RPC (same body the HTTP adapter accepts)
+        rpc = await door.handle_rpc({"seed": 4242, "priority": 9})
+        print(f"rpc:    rid={rpc['rid']} pool={rpc['pool']} "
+              f"items={rpc['items']}")
+
+        # HTTP adapter: handler threads bridge onto this event loop
+        loop = asyncio.get_running_loop()
+        srv = serve_http(door, loop)
+        threading.Thread(target=srv.serve_forever, daemon=True).start()
+        try:
+            host, port = srv.server_address[:2]
+            base = f"http://{host}:{port}"
+            body = json.dumps({"seed": 777}).encode()
+            req = urllib.request.Request(
+                f"{base}/v1/sample", data=body,
+                headers={"Content-Type": "application/json"})
+            # urllib blocks, so let a worker thread own the round-trip
+            resp = await asyncio.to_thread(
+                lambda: json.load(urllib.request.urlopen(req, timeout=30)))
+            print(f"http:   rid={resp['rid']} pool={resp['pool']} "
+                  f"items={resp['items']}")
+            metrics = await asyncio.to_thread(
+                lambda: urllib.request.urlopen(
+                    f"{base}/v1/metrics", timeout=30).read().decode())
+            served = [ln for ln in metrics.splitlines()
+                      if ln.startswith("ndpp_sched_admitted_total")]
+            print("metrics:", *served, sep="\n  ")
+        finally:
+            srv.shutdown()
+            srv.server_close()
+
+        print("stats:  ", door.scheduler.stats())
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

@@ -64,6 +64,11 @@ def engine_instruments(registry: MetricRegistry) -> types.SimpleNamespace:
         retired=c("ndpp_requests_retired_total",
                   "requests retired, by acceptance",
                   ("backend", "accepted")),
+        abandoned=c("ndpp_requests_abandoned_total",
+                    "queued requests dropped before admission "
+                    "(outcome: shed | cancelled) — these never reach the "
+                    "queue-wait or latency histograms",
+                    ("backend", "outcome")),
         ticks=c("ndpp_ticks_total", "engine ticks that advanced the pool",
                 ("backend",)),
         rounds=c("ndpp_spec_rounds_total",

@@ -31,10 +31,17 @@ class Span:
     """Lifecycle record for one engine request.
 
     States: ``queued`` (constructed at submit) → ``active`` (``admit``) →
-    ``retired`` (``retire``).  Timestamps are monotonic host seconds;
-    occupancy counters are bumped by the engine at its existing
-    host-sync points.
+    ``retired`` (``retire``); a request abandoned *before* admission
+    instead terminates as ``shed`` (the scheduler dropped it: deadline
+    expiry or queue-full backpressure) or ``cancelled`` (the caller
+    withdrew it) via ``abandon()``.  Abandoned spans never pass through
+    ``admit``, so queue-wait/latency histograms — which observe only at
+    admit/retire — are never polluted by requests that were never served.
+    Timestamps are monotonic host seconds; occupancy counters are bumped
+    by the engine at its existing host-sync points.
     """
+
+    TERMINAL_ABANDONED = ("shed", "cancelled")
 
     rid: int
     seed: int
@@ -64,6 +71,25 @@ class Span:
         self.trials = int(trials)
         self.accepted = bool(accepted)
         self.state = "retired"
+
+    def abandon(self, outcome: str = "cancelled") -> None:
+        """Terminal state for a request dropped before admission.
+
+        ``outcome`` is ``"shed"`` (dropped by the scheduler — deadline
+        expired, or evicted under queue-full backpressure) or
+        ``"cancelled"`` (withdrawn by the caller).  Only queued requests
+        can be abandoned; an admitted request always retires.
+        """
+        if outcome not in self.TERMINAL_ABANDONED:
+            raise ValueError(
+                f"abandon outcome must be one of {self.TERMINAL_ABANDONED}, "
+                f"got {outcome!r}")
+        if self.state != "queued":
+            raise ValueError(
+                f"only queued requests can be abandoned; rid={self.rid} "
+                f"is {self.state!r}")
+        self.t_retire = now()
+        self.state = outcome
 
     # -------------------------------------------------------------- durations
     @property

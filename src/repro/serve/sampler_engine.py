@@ -306,14 +306,44 @@ class SamplerEngine:
                 self._m.catalog_version.set(self._cat.version)
 
     # ------------------------------------------------------------- frontend
-    def submit(self, req: SampleRequest):
+    def submit(self, req: SampleRequest, span: Optional[Span] = None):
+        """Queue a request.  ``span`` lets a front door hand down the span
+        it opened at *its* admission point, so submit→retire latency is
+        measured from the moment the request entered the serving stack,
+        not from this (possibly much later) staging call."""
         self.queue.append(req)
         if self._tel is not None:
-            self._spans[req.rid] = Span(rid=req.rid, seed=req.seed,
-                                        backend=self.backend)
+            self._spans[req.rid] = span if span is not None else Span(
+                rid=req.rid, seed=req.seed, backend=self.backend)
             self._m.submitted.inc(backend=self.backend)
             self._m.queue_depth.set(len(self.queue))
             self._tel.flight.record("submit", rid=req.rid, seed=req.seed)
+
+    def cancel(self, rid: int, outcome: str = "cancelled") -> bool:
+        """Abandon a *queued* (never-admitted) request.
+
+        Returns True iff ``rid`` was waiting in the queue and has been
+        removed; its span terminates in the ``shed``/``cancelled`` state
+        (per ``outcome``) instead of ``retired``, so the queue-wait and
+        latency histograms — which only observe at admit/retire — are
+        never polluted by requests that were never served.  In-flight or
+        finished requests are not cancellable (returns False): a slot
+        that already burned proposals always retires normally.
+        """
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                if self._tel is not None:
+                    span = self._spans.pop(rid, None)
+                    if span is not None:
+                        span.abandon(outcome)
+                    self._m.abandoned.inc(backend=self.backend,
+                                          outcome=outcome)
+                    self._m.queue_depth.set(len(self.queue))
+                    self._tel.flight.record("abandon", rid=rid,
+                                            outcome=outcome)
+                return True
+        return False
 
     def swap_catalog(self, cat: Union[Catalog, CatalogState]):
         """Install a new catalog version between ticks — zero drain.

@@ -1,0 +1,522 @@
+"""Serve-replay harness + chaos tests for the front door (PR 8).
+
+The acceptance property: the admission scheduler decides only *when* a
+request reaches an engine — never what it samples.  Every proposal/step
+``t`` of request ``rid`` is keyed ``fold_in(PRNGKey(seed), t)`` inside
+the engines, so for any fixed arrival trace the retired draws must be
+bit-identical to submitting the same (rid, seed) set directly to
+``SamplerEngine`` — across backends, priorities, deadlines, queue churn,
+cancellations, and even mid-flight autoscaling of n_spec.
+
+Layers:
+  1. replay bit-equality (tests/_load.py traces on a virtual clock) for
+     rejection, MCMC, and mixed pools;
+  2. chaos/property tests (hypothesis + shim): random priorities,
+     deadlines, duplicate rids, cancellations, queue-full bursts — no
+     request lost or double-retired, priority order exact at each
+     admission instant, every shed has a flight event and a ``shed``
+     span;
+  3. the asyncio ``FrontDoor`` + stdlib HTTP adapter;
+  4. compile-cache: continuous admission through the scheduler compiles
+     nothing after warmup (strict CI leg runs this whole module).
+"""
+import asyncio
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs the real hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from _load import Arrival, VirtualClock, poisson_trace, replay
+from repro.analysis.runtime import CompileCounter
+from repro.core import preprocess
+from repro.obs import Telemetry
+from repro.serve.frontdoor import FrontDoor, ShedError, serve_http
+from repro.serve.sampler_engine import SampleRequest, SamplerEngine
+from repro.serve.scheduler import (
+    DuplicateRid,
+    Scheduler,
+    ServeRequest,
+)
+
+pytestmark = pytest.mark.strict
+
+M, K = 8, 4
+MCMC_KW = dict(backend="mcmc", mcmc_burn_in=32, mcmc_thin=8,
+               mcmc_steps_per_tick=8)
+
+# process-wide singleton (jax.monitoring listeners are permanent);
+# shared with tests/test_compile_cache.py — tests read deltas
+counter = CompileCounter.install()
+
+
+@pytest.fixture(scope="module")
+def sampler():
+    import jax.numpy as jnp
+
+    r = np.random.default_rng(7)
+    v = jnp.asarray(r.normal(size=(M, K)) * 0.6, jnp.float32)
+    b = jnp.asarray(r.normal(size=(M, K)) * 0.6, jnp.float32)
+    d = jnp.asarray(r.normal(size=(K, K)), jnp.float32)
+    return preprocess(v, b, d, block=2)
+
+
+def make_pools(sampler, tel=None, *, n_spec=4):
+    return {
+        "rej": SamplerEngine(sampler, n_slots=3, n_spec=n_spec,
+                             telemetry=tel),
+        "mcmc": SamplerEngine(sampler, n_slots=2, telemetry=tel, **MCMC_KW),
+    }
+
+
+def direct_draws(sampler, reqs_by_backend):
+    """The same (rid, seed, max_trials) sets submitted straight to fresh
+    engines — the ground truth every scheduled path must reproduce."""
+    out = {}
+    for backend, reqs in reqs_by_backend.items():
+        if not reqs:
+            continue
+        eng = (SamplerEngine(sampler, n_slots=3, n_spec=4)
+               if backend == "rejection"
+               else SamplerEngine(sampler, n_slots=2, **MCMC_KW))
+        for r in reqs:
+            eng.submit(SampleRequest(rid=r.rid, seed=r.seed,
+                                     max_trials=r.max_trials))
+        out.update(eng.run(max_ticks=5000))
+    return out
+
+
+def assert_same_draw(a, b, rid):
+    assert np.array_equal(np.asarray(a.items), np.asarray(b.items)), rid
+    assert np.array_equal(np.asarray(a.mask), np.asarray(b.mask)), rid
+    assert a.trials == b.trials and a.accepted == b.accepted, rid
+
+
+def _check_against_direct(sampler, sched, outcomes, reqs):
+    """Every done outcome equals a direct submission to an engine of the
+    backend it was actually routed to."""
+    reqs = {r.rid: r for r in reqs}
+    by_backend = {"rejection": [], "mcmc": []}
+    for rid, out in outcomes.items():
+        if out.status == "done":
+            by_backend[sched.pools[out.pool].backend].append(reqs[rid])
+    truth = direct_draws(sampler, by_backend)
+    assert sorted(truth) == sorted(
+        r for r, o in outcomes.items() if o.status == "done")
+    for rid, res in truth.items():
+        assert_same_draw(outcomes[rid].result, res, rid)
+    return len(truth)
+
+
+# ------------------------------------------------------------ serve replay
+def test_replay_bit_identical_rejection(sampler):
+    clock = VirtualClock()
+    tel = Telemetry()
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=3, n_spec=4,
+                                            telemetry=tel)},
+                      clock=clock, telemetry=tel)
+    trace = poisson_trace(11, 24, rate=500.0, priorities=(0, 1, 2))
+    outcomes = replay(sched, clock, trace)
+    assert all(o.status == "done" for o in outcomes.values())
+    n = _check_against_direct(sampler, sched, outcomes,
+                              [a.req for a in trace])
+    assert n == 24
+
+
+def test_replay_bit_identical_mcmc(sampler):
+    clock = VirtualClock()
+    sched = Scheduler({"mcmc": SamplerEngine(sampler, n_slots=2, **MCMC_KW)},
+                      clock=clock)
+    trace = poisson_trace(12, 8, rate=300.0)
+    outcomes = replay(sched, clock, trace)
+    assert all(o.status == "done" for o in outcomes.values())
+    n = _check_against_direct(sampler, sched, outcomes,
+                              [a.req for a in trace])
+    assert n == 8
+
+
+def test_replay_bit_identical_mixed_pools(sampler):
+    """Mixed rejection+MCMC pools, some requests pinned, some routed:
+    every draw equals direct submission to the backend it landed on."""
+    clock = VirtualClock()
+    tel = Telemetry()
+    sched = Scheduler(make_pools(sampler, tel), clock=clock, telemetry=tel)
+    trace = poisson_trace(13, 20, rate=400.0,
+                          pools=(None, "rej", "mcmc"), priorities=(0, 5))
+    outcomes = replay(sched, clock, trace)
+    assert all(o.status == "done" for o in outcomes.values())
+    pools_used = {o.pool for o in outcomes.values()}
+    assert pools_used == {"rej", "mcmc"}
+    _check_against_direct(sampler, sched, outcomes, [a.req for a in trace])
+
+
+def test_replay_schedule_invariant(sampler):
+    """The same request set under three different arrival schedules (and
+    tick cadences) retires bit-identical draws — scheduling is invisible
+    to the sampler."""
+    base = poisson_trace(17, 16, rate=400.0, pools=("rej",))
+    draws = []
+    for rate_scale, tick_dt in ((1.0, 0.002), (0.1, 0.002), (1.0, 0.01)):
+        clock = VirtualClock()
+        sched = Scheduler(make_pools(sampler), clock=clock)
+        trace = [Arrival(t=a.t / rate_scale,
+                         req=ServeRequest(rid=a.req.rid, seed=a.req.seed,
+                                          pool=a.req.pool))
+                 for a in base]
+        outcomes = replay(sched, clock, trace, tick_dt=tick_dt)
+        draws.append({rid: outcomes[rid].result for rid in outcomes})
+    for other in draws[1:]:
+        assert sorted(other) == sorted(draws[0])
+        for rid in draws[0]:
+            assert_same_draw(draws[0][rid], other[rid], rid)
+
+
+def test_replay_with_cancellations_leaves_rest_bit_identical(sampler):
+    """Cancelling queued requests mid-trace must not perturb any other
+    draw, and cancelled rids end cancelled with a span to match."""
+    clock = VirtualClock()
+    tel = Telemetry()
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=2, n_spec=4,
+                                            telemetry=tel)},
+                      clock=clock, telemetry=tel)
+    trace = poisson_trace(19, 18, rate=2000.0)   # bursty: deep queue
+    cancel_rids = [7, 11, 15]
+    cancel_at = {rid: trace[rid].t + 1e-4 for rid in cancel_rids}
+    outcomes = replay(sched, clock, trace, cancel_at=cancel_at)
+    cancelled = sorted(r for r, o in outcomes.items()
+                       if o.status == "cancelled")
+    # bursty arrivals + 2 slots: the marked rids are still queued when
+    # their cancel fires
+    assert cancelled == cancel_rids
+    for rid in cancelled:
+        assert sched.spans[rid].state == "cancelled"
+        assert any(e["rid"] == rid for e in tel.flight.events("sched_cancel"))
+    _check_against_direct(
+        sampler, sched, outcomes,
+        [a.req for a in trace if a.req.rid not in cancel_rids])
+
+
+# --------------------------------------------------------- admission order
+def test_priority_order_exact_single_pool(sampler):
+    """All requests queued upfront on one pool: admission order must be
+    exactly (-priority, seq) — zero priority inversions."""
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=2, n_spec=4)})
+    reqs = [ServeRequest(rid=i, seed=i, priority=(i * 7) % 5)
+            for i in range(12)]
+    for r in reqs:
+        sched.submit(r)
+    admitted = []
+    while sched.busy():
+        admitted += [rid for rid, _ in sched.tick().admitted]
+    expected = [r.rid for r in sorted(reqs,
+                                      key=lambda r: (-r.priority, r.seq))]
+    assert admitted == expected
+    assert all(o.status == "done" for o in sched.outcomes.values())
+
+
+def test_deadline_shed_has_flight_event_and_span(sampler):
+    tel = Telemetry()
+    clock = VirtualClock()
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=2, n_spec=4,
+                                            telemetry=tel)},
+                      clock=clock, telemetry=tel)
+    sched.submit(ServeRequest(rid=0, seed=1, deadline=0.5))
+    sched.submit(ServeRequest(rid=1, seed=2))
+    clock.advance(1.0)                      # rid 0 expires in the queue
+    outcomes = sched.run()
+    assert outcomes[0].status == "shed" and outcomes[0].reason == "deadline"
+    assert outcomes[1].status == "done"
+    assert sched.spans[0].state == "shed"
+    assert sched.spans[0].queue_wait is None    # histograms never saw it
+    shed_ev = tel.flight.events("sched_shed")
+    assert [e["rid"] for e in shed_ev] == [0]
+    assert shed_ev[0]["reason"] == "deadline"
+    assert tel.registry.get("ndpp_sched_shed_total").value(
+        reason="deadline") == 1
+    # queue-wait histogram counts only the served request
+    assert tel.registry.get(
+        "ndpp_sched_queue_wait_seconds").data().count == 1
+
+
+def test_queue_full_reject_and_evict(sampler):
+    # reject: the new request bounces
+    tel = Telemetry()
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=1, n_spec=4,
+                                            telemetry=tel)},
+                      max_queue=2, on_full="reject", telemetry=tel)
+    assert sched.submit(ServeRequest(rid=0, seed=0))
+    assert sched.submit(ServeRequest(rid=1, seed=1))
+    assert not sched.submit(ServeRequest(rid=2, seed=2))
+    assert sched.outcomes[2].status == "shed"
+    assert sched.outcomes[2].reason == "queue_full"
+    assert sched.spans[2].state == "shed"
+    assert sched.run()[0].status == "done"
+
+    # evict: a higher-priority submit displaces the worst queued request
+    tel = Telemetry()
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=1, n_spec=4,
+                                            telemetry=tel)},
+                      max_queue=2, on_full="evict", telemetry=tel)
+    sched.submit(ServeRequest(rid=0, seed=0, priority=1))
+    sched.submit(ServeRequest(rid=1, seed=1, priority=0))   # the worst
+    assert sched.submit(ServeRequest(rid=2, seed=2, priority=5))
+    assert sched.outcomes[1].status == "shed"
+    assert sched.outcomes[1].reason == "evicted"
+    # a low-priority submit against a full queue still bounces itself
+    assert not sched.submit(ServeRequest(rid=3, seed=3, priority=-1))
+    assert sched.outcomes[3].reason == "queue_full"
+    outcomes = sched.run()
+    assert {r: o.status for r, o in outcomes.items()} == {
+        0: "done", 1: "shed", 2: "done", 3: "shed"}
+
+
+def test_duplicate_rid_rejected(sampler):
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=2, n_spec=4)})
+    sched.submit(ServeRequest(rid=5, seed=1))
+    with pytest.raises(DuplicateRid):
+        sched.submit(ServeRequest(rid=5, seed=2))
+    sched.run()
+    with pytest.raises(DuplicateRid):      # rids stay unique after retire
+        sched.submit(ServeRequest(rid=5, seed=3))
+
+
+# ------------------------------------------------------------------- chaos
+@settings(max_examples=5, deadline=None)
+@given(trace_seed=st.integers(0, 2 ** 16), max_queue=st.integers(2, 8),
+       on_full=st.sampled_from(["reject", "evict"]),
+       deadline_frac=st.floats(0.0, 0.5))
+def test_chaos_no_request_lost(sampler, trace_seed, max_queue, on_full,
+                               deadline_frac):
+    """Random priorities/deadlines/bursts/cancels against a tiny queue:
+    every submitted rid ends in exactly one terminal state, nothing is
+    double-retired, and every shed has a flight event + shed span."""
+    clock = VirtualClock()
+    tel = Telemetry()
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=2, n_spec=4,
+                                            telemetry=tel)},
+                      clock=clock, telemetry=tel, max_queue=max_queue,
+                      on_full=on_full)
+    trace = poisson_trace(trace_seed, 20, rate=3000.0,
+                          priorities=(-1, 0, 3), deadline_frac=deadline_frac,
+                          deadline_range=(0.001, 0.02))
+    retired_seen = []
+    submitted = []
+    rng = np.random.default_rng(trace_seed + 1)
+    for arr in trace:
+        clock.advance(max(0.0, arr.t - clock.t))
+        sched.submit(arr.req)
+        submitted.append(arr.req.rid)
+        with pytest.raises(DuplicateRid):
+            sched.submit(ServeRequest(rid=arr.req.rid, seed=0))
+        if rng.random() < 0.2:
+            sched.cancel(int(rng.choice(submitted)))
+        if sched.busy() and rng.random() < 0.5:
+            clock.advance(0.002)
+            retired_seen += list(sched.tick().retired)
+    while sched.busy():
+        clock.advance(0.002)
+        retired_seen += list(sched.tick().retired)
+
+    outcomes = sched.outcomes
+    assert sorted(outcomes) == sorted(submitted)          # none lost
+    assert len(retired_seen) == len(set(retired_seen))    # none retired 2x
+    assert sorted(retired_seen) == sorted(
+        r for r, o in outcomes.items() if o.status == "done")
+    for rid, out in outcomes.items():
+        assert out.status in ("done", "shed", "cancelled")
+        if out.status == "done":
+            assert out.result is not None and out.pool == "rej"
+        else:
+            assert sched.spans[rid].state in ("shed", "cancelled")
+            assert sched.spans[rid].state == (
+                "shed" if out.status == "shed" else "cancelled")
+        if out.status == "shed":
+            assert any(e["rid"] == rid
+                       for e in tel.flight.events("sched_shed"))
+    # the served subset is still bit-identical to direct submission
+    _check_against_direct(sampler, sched, outcomes, [a.req for a in trace])
+
+
+# -------------------------------------------------------------- autoscale
+def test_autoscale_doubles_and_halves_n_spec(sampler):
+    tel = Telemetry()
+    clock = VirtualClock()
+    eng = SamplerEngine(sampler, n_slots=2, n_spec=2, telemetry=tel)
+    sched = Scheduler({"rej": eng}, clock=clock, telemetry=tel,
+                      autoscale_n_spec=True, target_queue_wait=0.05,
+                      autoscale_every=2, n_spec_min=1, n_spec_max=8)
+    reqs = [ServeRequest(rid=i, seed=i) for i in range(30)]
+    for r in reqs:
+        sched.submit(r)
+    clock.advance(1.0)           # the whole queue is now 1s old: p99 >> SLO
+    seen = []
+    while sched.busy():
+        clock.advance(0.001)
+        sched.tick()
+        seen.append(eng.n_spec)
+    assert max(seen) > 2                       # pressure doubled it
+    assert all(s & (s - 1) == 0 for s in seen)  # power-of-two steps only
+    assert max(seen) <= 8
+    ev = tel.flight.events("n_spec_resize")
+    assert ev and all(e["new"] in (1, 2, 4, 8) for e in ev)
+    assert tel.registry.get("ndpp_sched_n_spec").value(pool="rej") == \
+        eng.n_spec
+    # n_spec changed mid-flight, draws still equal direct submission
+    _check_against_direct(sampler, sched, dict(sched.outcomes), reqs)
+
+
+# ---------------------------------------------------------- compile cache
+def test_scheduler_admission_compiles_nothing_after_warmup(sampler):
+    """Continuous batching through the scheduler — queue churn, sheds,
+    priority reorders — must hit the engine's jit cache from tick 2 on."""
+    sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=4, n_spec=4)},
+                      max_queue=64)
+    for i in range(8):
+        sched.submit(ServeRequest(rid=i, seed=i, priority=i % 3))
+    sched.tick()                             # warmup: the allowed compiles
+    rid = 8
+    per_tick = []
+    while sched.busy():
+        for _ in range(3):                   # keep admission churn alive
+            if rid < 40:
+                sched.submit(ServeRequest(rid=rid, seed=rid,
+                                          priority=rid % 3))
+                rid += 1
+        with counter.measure() as m:
+            sched.tick()
+        per_tick.append(m.compiles)
+    assert per_tick and per_tick == [0] * len(per_tick), (
+        f"scheduler ticks recompiled: {per_tick}")
+    assert len([o for o in sched.outcomes.values()
+                if o.status == "done"]) == 40
+
+
+# ------------------------------------------------------------- front door
+def test_frontdoor_async_matches_direct(sampler):
+    async def main():
+        tel = Telemetry()
+        sched = Scheduler(make_pools(sampler, tel), telemetry=tel,
+                          max_queue=64)
+        async with FrontDoor(sched, idle_interval=0.001) as door:
+            rej = [door.sample(100 + i, rid=i, pool="rej")
+                   for i in range(6)]
+            mc = [door.sample(200 + i, rid=50 + i, pool="mcmc")
+                  for i in range(3)]
+            res = await asyncio.gather(*rej, *mc)
+        return sched, {i: r for i, r in zip(
+            list(range(6)) + list(range(50, 53)), res)}
+
+    sched, got = asyncio.run(main())
+    reqs = ([ServeRequest(rid=i, seed=100 + i, pool="rej")
+             for i in range(6)] +
+            [ServeRequest(rid=50 + i, seed=200 + i, pool="mcmc")
+             for i in range(3)])
+    truth = direct_draws(sampler, {
+        "rejection": reqs[:6], "mcmc": reqs[6:]})
+    assert sorted(truth) == sorted(got)
+    for rid in truth:
+        assert_same_draw(got[rid], truth[rid], rid)
+
+
+def test_frontdoor_shed_and_cancel_surface_as_exceptions(sampler):
+    async def main():
+        tel = Telemetry()
+        sched = Scheduler({"rej": SamplerEngine(sampler, n_slots=1,
+                                                n_spec=4, telemetry=tel)},
+                          telemetry=tel, max_queue=3)
+        door = FrontDoor(sched, idle_interval=0.001)
+        # pump not started yet: everything below is deterministic
+        t1 = asyncio.ensure_future(door.sample(2, rid=1))
+        t2 = asyncio.ensure_future(door.sample(3, rid=2))
+        t3 = asyncio.ensure_future(door.sample(4, rid=3))
+        await asyncio.sleep(0)               # all three enqueue
+        with pytest.raises(ShedError) as ei:   # 4th submit: queue full
+            await door.sample(5, rid=4)
+        assert ei.value.outcome.reason == "queue_full"
+        assert door.cancel(3)                # still queued — withdrawable
+        assert not door.cancel(3)
+        with pytest.raises(asyncio.CancelledError):
+            await t3
+        door.start()
+        r1, r2 = await asyncio.gather(t1, t2)
+        assert r1.accepted in (True, False) and r2 is not None
+        with pytest.raises(ShedError) as ei:
+            await door.sample(1, rid=0, deadline_in=-1.0)
+        assert ei.value.outcome.reason == "deadline"
+        with pytest.raises(DuplicateRid):    # rids stay unique after shed
+            await door.sample(9, rid=0)
+        await door.drain()
+        assert sched.outcomes[0].status == "shed"
+        assert sched.outcomes[3].status == "cancelled"
+        assert sched.spans[3].state == "cancelled"
+        assert sched.outcomes[4].reason == "queue_full"
+
+    asyncio.run(main())
+
+
+def test_frontdoor_http_adapter(sampler):
+    async def main():
+        tel = Telemetry()
+        sched = Scheduler(make_pools(sampler, tel), telemetry=tel,
+                          max_queue=32)
+        async with FrontDoor(sched, idle_interval=0.001) as door:
+            srv = serve_http(door, asyncio.get_running_loop())
+            thread = threading.Thread(target=srv.serve_forever, daemon=True)
+            thread.start()
+            host, port = srv.server_address
+            loop = asyncio.get_running_loop()
+
+            def call(method, path, body=None):
+                data = (json.dumps(body).encode()
+                        if body is not None else None)
+                r = urllib.request.Request(f"http://{host}:{port}{path}",
+                                           data=data, method=method)
+                try:
+                    with urllib.request.urlopen(r, timeout=30) as resp:
+                        return resp.status, json.loads(resp.read() or b"{}")
+                except urllib.error.HTTPError as e:
+                    return e.code, json.loads(e.read() or b"{}")
+
+            code, body = await loop.run_in_executor(
+                None, call, "POST", "/v1/sample",
+                {"seed": 42, "rid": 1, "pool": "rej"})
+            assert code == 200 and body["rid"] == 1
+            assert body["pool"] == "rej" and body["accepted"] in (
+                True, False)
+            # the HTTP draw equals direct engine submission
+            truth = direct_draws(sampler, {"rejection": [
+                ServeRequest(rid=1, seed=42)]})[1]
+            picked = np.asarray(truth.items)[np.asarray(truth.mask)]
+            assert body["items"] == picked.tolist()
+
+            code, body = await loop.run_in_executor(
+                None, call, "POST", "/v1/sample", {"seed": 42, "rid": 1})
+            assert code == 409                       # duplicate rid
+            code, body = await loop.run_in_executor(
+                None, call, "POST", "/v1/sample", {"nope": 1})
+            assert code == 400
+            code, body = await loop.run_in_executor(
+                None, call, "GET", "/v1/stats")
+            assert code == 200 and body["requests"]["done"] == 1
+            code, _ = await loop.run_in_executor(
+                None, call, "GET", "/v1/nothing")
+            assert code == 404
+            # metrics endpoint serves the shared registry
+            def get_text(path):
+                with urllib.request.urlopen(
+                        f"http://{host}:{port}{path}", timeout=30) as r:
+                    return r.status, r.read().decode()
+            code, text = await loop.run_in_executor(
+                None, get_text, "/v1/metrics")
+            assert code == 200
+            assert "ndpp_sched_submitted_total 1" in text
+            srv.shutdown()
+
+    asyncio.run(main())

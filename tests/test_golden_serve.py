@@ -1,0 +1,177 @@
+"""Golden serve trace: a fixed front-door episode must replay bit-for-bit.
+
+One scheduler over two pools — a rejection engine on a *dynamic catalog*
+and an MCMC engine — runs a frozen episode: two submission waves with a
+``swap_catalog`` (batch insert) between them, one deadline shed, one
+cancellation, then a drain.  The committed golden file freezes every
+discrete outcome: per-request draw, routed pool, pinned catalog version,
+the exact admission order, and the tick count.  Any change to the key
+schedule, the admission policy, the routing tiebreak, or the catalog
+pinning then fails against the stored trace instead of sliding through.
+
+The same episode re-runs under 2 simulated devices (catalog + spectral
+both item-sharded) in a subprocess and must match the SAME golden file —
+sharding the serving stack moves rows, never changes what is sampled or
+when it is admitted.
+
+Regenerate after an intentional change with
+``pytest tests/test_golden_serve.py --regen-golden`` (the sharded leg
+always compares, never writes).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _golden import assert_matches_golden
+from _load import VirtualClock
+
+from repro.core import preprocess
+from repro.obs import Telemetry
+from repro.serve.catalog import Catalog
+from repro.serve.sampler_engine import SamplerEngine
+from repro.serve.scheduler import Scheduler, ServeRequest
+
+M, K, BLOCK, SCALE = 256, 4, 4, 0.1
+MCMC_KW = dict(backend="mcmc", mcmc_burn_in=32, mcmc_thin=8,
+               mcmc_steps_per_tick=8)   # 8 divides refresh_every=64:
+#                                         sharded/unsharded stay bit-exact
+
+
+def frozen_kernel():
+    rng = np.random.default_rng(31415)
+    import jax.numpy as jnp
+
+    v = jnp.asarray(rng.normal(size=(M, K)) * SCALE, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(M, K)) * SCALE, jnp.float32)
+    d = jnp.asarray(rng.normal(size=(K, K)), jnp.float32)
+    return v, b, d
+
+
+def build_serve_payload(mesh=None):
+    v, b, d = frozen_kernel()
+    tel = Telemetry()
+    # capacity 2M: the mid-episode insert lands in leaf slack, no rebuild
+    cat = Catalog(v, b, d, block=BLOCK, capacity=2 * M, mesh=mesh,
+                  telemetry=tel)
+    pools = {
+        "dyn": SamplerEngine(cat, n_slots=3, n_spec=4, telemetry=tel),
+        "mcmc": SamplerEngine(preprocess(v, b, d, block=BLOCK),
+                              n_slots=2, mesh=mesh, telemetry=tel,
+                              **MCMC_KW),
+    }
+    clock = VirtualClock()
+    sched = Scheduler(pools, clock=clock, telemetry=tel, max_queue=64)
+    admitted = []
+
+    def tick(n=1):
+        for _ in range(n):
+            admitted.extend(sched.tick().admitted)
+
+    # wave 1: pinned + routed requests, one pre-expired deadline, one
+    # rid cancelled while queued
+    for i in range(4):
+        sched.submit(ServeRequest(rid=i, seed=1000 + i, pool="dyn"))
+    for i in range(4, 6):
+        sched.submit(ServeRequest(rid=i, seed=1000 + i, pool="mcmc"))
+    sched.submit(ServeRequest(rid=98, seed=1098))          # routed
+    sched.submit(ServeRequest(rid=99, seed=1099, deadline=-1.0))
+    sched.cancel(98)
+    tick(3)
+
+    # mid-episode catalog mutation + swap: later "dyn" admissions pin v1
+    ins_rng = np.random.default_rng(777)
+    cat.insert_items(ins_rng.normal(size=(8, K)).astype(np.float32) * SCALE,
+                     ins_rng.normal(size=(8, K)).astype(np.float32) * SCALE)
+    sched.swap_catalog("dyn", cat)
+
+    # wave 2 against the new version, then drain
+    for i in range(6, 10):
+        sched.submit(ServeRequest(rid=i, seed=1000 + i, pool="dyn"))
+    sched.submit(ServeRequest(rid=10, seed=1010, pool="mcmc"))
+    while sched.busy():
+        tick()
+
+    reqs = {}
+    for rid, out in sorted(sched.outcomes.items()):
+        span = sched.spans[rid]
+        rec = {"status": out.status, "pool": out.pool,
+               "pinned_version": span.pinned_version}
+        if out.status == "done":
+            res = out.result
+            rec.update(
+                items=np.asarray(res.items)[np.asarray(res.mask)].tolist(),
+                trials=int(res.trials), accepted=bool(res.accepted))
+        else:
+            rec["reason"] = out.reason
+        reqs[rid] = rec
+    return {
+        "requests": reqs,
+        "admitted": [[rid, pool] for rid, pool in admitted],
+        "catalog_versions": [0, cat.version],
+        "n_ticks": sched.ticks,
+    }
+
+
+@pytest.fixture(scope="module")
+def payload():
+    return build_serve_payload()
+
+
+def test_golden_serve_trace(payload, regen_golden):
+    assert_matches_golden("serve", payload, regen_golden)
+
+
+def test_serve_trace_semantics(payload):
+    """Self-consistency of the episode, independent of the stored file:
+    the swap really split the pinned versions, sheds/cancels are
+    terminal, admission covers exactly the served rids."""
+    reqs = payload["requests"]
+    assert reqs[99]["status"] == "shed" and reqs[99]["reason"] == "deadline"
+    assert reqs[98]["status"] == "cancelled"
+    done = {r: v for r, v in reqs.items() if v["status"] == "done"}
+    assert sorted(done) == sorted(set(range(11)))
+    pins = {r: v["pinned_version"] for r, v in done.items()
+            if v["pool"] == "dyn"}
+    assert set(pins.values()) == {0, 1}          # both sides of the swap
+    assert all(pins[r] == 1 for r in range(6, 10))
+    assert sorted(r for r, _ in payload["admitted"]) == sorted(done)
+
+
+def test_golden_serve_sharded_two_devices(regen_golden):
+    """The same episode on 2 simulated devices (catalog and spectral
+    item-sharded) must match the SAME golden file — always compared,
+    never regenerated, so a sharded divergence can never overwrite the
+    unsharded trace."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.update(
+        XLA_FLAGS="--xla_force_host_platform_device_count=2",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(root, "src"), os.path.join(root, "tests")]
+            + ([p] if (p := env.get("PYTHONPATH")) else [])),
+    )
+    script = textwrap.dedent("""
+        import json
+        import jax, numpy as np
+        from jax.sharding import Mesh
+
+        assert len(jax.devices()) == 2, jax.devices()
+        mesh = Mesh(np.asarray(jax.devices()), ("model",))
+        from test_golden_serve import build_serve_payload
+        print("GOLDEN-JSON:" + json.dumps(build_serve_payload(mesh)))
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, cwd=root,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("GOLDEN-JSON:"))
+    assert_matches_golden("serve", json.loads(line[len("GOLDEN-JSON:"):]),
+                          regen=False)

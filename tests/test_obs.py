@@ -207,6 +207,57 @@ def test_span_lifecycle():
     json.dumps(snap)
 
 
+def test_span_abandon_terminal_states():
+    """A queued request abandoned before admission terminates as
+    ``shed``/``cancelled`` — and only a queued one can be abandoned."""
+    for outcome in Span.TERMINAL_ABANDONED:
+        s = Span(rid=1, seed=0, backend="rejection")
+        s.abandon(outcome)
+        assert s.state == outcome and s.t_retire is not None
+        # never admitted: queue_wait stays None so histograms that observe
+        # at admit/retire can't see this request
+        assert s.queue_wait is None and s.service_time is None
+        json.dumps(s.snapshot())
+        with pytest.raises(ValueError, match="only queued"):
+            s.abandon(outcome)     # already terminal
+    s = Span(rid=2, seed=0, backend="rejection")
+    with pytest.raises(ValueError, match="outcome must be one of"):
+        s.abandon("lost")
+    s.admit(slot=0)
+    with pytest.raises(ValueError, match="only queued"):
+        s.abandon("cancelled")     # admitted requests always retire
+
+
+def test_cancel_keeps_wait_histograms_clean(sampler):
+    """Engine-level cancel: the span ends ``cancelled``, the abandoned
+    counter and flight recorder see it, and the queue-wait / latency
+    histograms count only the requests that were actually served."""
+    tel = Telemetry()
+    eng = SamplerEngine(sampler, n_slots=2, telemetry=tel)
+    for i in range(6):
+        eng.submit(SampleRequest(rid=i, seed=i, max_trials=200))
+    # 4, 5 still queued (pool is 2-wide and no tick has run)
+    assert eng.cancel(4) and eng.cancel(5, outcome="shed")
+    assert not eng.cancel(4)       # already gone
+    assert not eng.cancel(99)      # never submitted
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2, 3]
+    reg = tel.registry
+    ab = reg.get("ndpp_requests_abandoned_total")
+    assert ab.total() == 2
+    assert ab.value(backend="rejection", outcome="cancelled") == 1
+    assert ab.value(backend="rejection", outcome="shed") == 1
+    # unpolluted: exactly one observation per *served* request, none for
+    # the abandoned pair (their spans never reached admit/retire)
+    assert reg.get("ndpp_queue_wait_seconds").data(
+        backend="rejection").count == 4
+    assert reg.get("ndpp_request_latency_seconds").data(
+        backend="rejection").count == 4
+    evs = tel.flight.events("abandon")
+    assert [(e["rid"], e["outcome"]) for e in evs] == [
+        (4, "cancelled"), (5, "shed")]
+
+
 # ------------------------------------------------- instrumentation is free
 def _drain(sampler, telemetry, n=12, **kw):
     eng = SamplerEngine(sampler, n_slots=4, telemetry=telemetry, **kw)
