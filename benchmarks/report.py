@@ -1,10 +1,16 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
-results/dryrun/*.json and results/roofline/*.json."""
+results/dryrun/*.json and results/roofline/*.json, plus markdown tables
+for the committed BENCH_*.json artifacts (``--bench``).
+
+Bench rendering schema-validates the file first (``repro.obs.prof.
+schema``) and exits nonzero on envelope violations, so the doc snippet
+that runs this in CI doubles as a bench-file schema gate."""
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
 
 
 def _fmt_bytes(b):
@@ -60,7 +66,68 @@ def roofline_table() -> str:
     return "\n".join(out)
 
 
+def _cell(v):
+    if v is None:
+        return "-"
+    if isinstance(v, bool):
+        return str(v).lower()
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def bench_tables(path: str) -> str:
+    """Markdown tables for one committed BENCH_*.json file.
+
+    One table per mode, columns = the union of the mode's scalar row
+    fields in first-seen order (nested snapshots — histograms, phase
+    maps, roofline joins — are summarized by the scalar columns the
+    bench derives from them).  Schema-validates first: a malformed file
+    raises ``SystemExit`` so CI renders-or-fails, never renders garbage.
+    """
+    from repro.obs.prof import schema
+
+    with open(path) as f:
+        payload = json.load(f)
+    errors, warnings = schema.validate(payload, label=path)
+    for w in warnings:
+        print(f"warn  {w}", file=sys.stderr)
+    if errors:
+        for e in errors:
+            print(f"FAIL  {e}", file=sys.stderr)
+        raise SystemExit(f"{path}: schema violations — not rendering")
+
+    meta = payload.get("meta", {})
+    commit = str(meta.get("git_commit", ""))[:9] or "-"
+    dirty = "+dirty" if meta.get("git_dirty") else ""
+    out = [f"### {os.path.basename(path)}",
+           f"_backend={meta.get('backend', '-')} "
+           f"jax={meta.get('jax', '-')} commit={commit}{dirty}_"]
+    for mode, rows in sorted(payload.get("modes", {}).items()):
+        cols: list = []
+        for row in rows:
+            cols.extend(k for k, v in row.items()
+                        if k not in cols and not isinstance(v, (dict, list)))
+        if not cols:
+            continue
+        out.append(f"\n#### {mode}\n")
+        out.append("| " + " | ".join(cols) + " |")
+        out.append("|" + "---|" * len(cols))
+        for row in rows:
+            out.append("| " + " | ".join(
+                _cell(row.get(c)) for c in cols) + " |")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
+    if "--bench" in sys.argv[1:]:
+        # render the committed bench artifacts (schema-gated)
+        paths = [a for a in sys.argv[1:] if a != "--bench"] or [
+            "BENCH_sampling.json", "BENCH_profile.json"]
+        for p in paths:
+            if os.path.exists(p):
+                print(bench_tables(p) + "\n")
+        raise SystemExit(0)
     print("## Dry-run\n")
     print(dryrun_table())
     print("\n## Roofline\n")

@@ -598,6 +598,199 @@ def run_serve(ms: List[int] = None, k: int = 32, n_requests: int = 96,
     return rows
 
 
+def run_profile(ms: List[int] = None, k: int = 8, smoke: bool = False,
+                report_path: str = "", out_rows: List[Dict] = None):
+    """Device-phase attribution profile of the serving engine.
+
+    For each backend, drives a telemetry-equipped engine under a
+    programmatic ``jax.profiler`` capture, folds the trace into
+    per-phase attribution (``repro.obs.prof.parse``), joins measured
+    device-scope busy time against the analytic roofline cost model
+    (``repro.obs.prof.cost``), and cross-checks the engine's
+    call-boundary accounting against the trace's own dispatch markers.
+    Committed rows carry the exact per-tick dispatch/transfer accounting
+    — ``dispatches_per_tick`` is the number the fused-megakernel roadmap
+    item must drive to 1 — plus the host-gap fraction quantifying how
+    much tick wall time the device sits idle.
+
+    If the profiler cannot capture in this environment the accounting
+    columns still commit (attribution fields stay None) — the bench
+    degrades, never crashes.
+    """
+    import tempfile
+
+    from repro.core import mcmc as mcmc_core
+    from repro.obs.prof import attribute, load_trace
+    from repro.obs.prof import capture as prof_capture
+    from repro.obs.prof import cost as prof_cost
+    from repro.serve.sampler_engine import (
+        SampleRequest,
+        SamplerEngine,
+        _fanout_keys,
+        _spec_round,
+    )
+
+    ms = ms or ([2 ** 8] if smoke else [2 ** 12])
+    n_slots, n_spec = 8, 4
+    n_ticks = 4 if smoke else 16
+    mcmc_steps = 16
+    rows, blobs = [], []
+
+    def _profiled_ticks(eng):
+        """n_ticks engine steps under capture; returns (delta, report)."""
+        acct = eng._acct
+        since = acct.totals()
+        log_dir = tempfile.mkdtemp(prefix="ndpp_profile_")
+        rep = None
+        try:
+            with prof_capture.capture(log_dir):
+                for _ in range(n_ticks):
+                    assert eng.step(), "engine idle mid-capture"
+        except prof_capture.ProfilerUnavailable as e:
+            print(f"profile: capture unavailable ({e}); accounting only")
+            for _ in range(n_ticks):
+                assert eng.step(), "engine idle mid-measurement"
+        else:
+            rep = log_dir
+        return acct.delta(since), rep
+
+    # ---------------------------------------------------------- rejection
+    for m in ms:
+        v, b, d = synthetic_features(m, k // 2, seed=0)
+        scale = 1.0 / np.sqrt(m)
+        sampler = preprocess(v * scale, b * scale, d, block=64)
+        tel = Telemetry(profile=True)
+        eng = SamplerEngine(sampler, n_slots=n_slots, n_spec=n_spec,
+                            telemetry=tel)
+        for i in range(20 * n_ticks * n_slots):   # queue never drains
+            eng.submit(SampleRequest(rid=i, seed=i))
+        eng.step()                         # compile outside the capture
+        delta, log_dir = _profiled_ticks(eng)
+
+        rep = None
+        if log_dir is not None:
+            # scope maps from the warm jit cache: same call signatures
+            # the engine dispatches, so lowering compiles nothing
+            fanout_args = (eng.slot_key,
+                           np.asarray(eng.slot_trials, np.uint32),
+                           np.arange(eng.n_spec, dtype=np.uint32))
+            maps = prof_capture.compiled_scope_maps([
+                (_fanout_keys, fanout_args),
+                (_spec_round, (eng.sampler, _fanout_keys(*fanout_args))),
+            ])
+            rep = attribute(load_trace(prof_capture.trace_path(log_dir)),
+                            scope_maps=maps)
+            # the accounting identity, checked against the trace itself:
+            # call-boundary launch counts == PjitFunction events
+            assert rep.dispatches_total == delta["dispatches_total"], (
+                "accounting disagrees with the captured trace",
+                rep.dispatches, delta["dispatches"])
+        row = _profile_row("rejection", m, k, n_slots, n_spec, n_ticks,
+                           delta, rep,
+                           prof_cost.phase_costs_rejection(
+                               m, k, n_slots * n_spec * n_ticks, block=64))
+        rows.append(row)
+        if rep is not None:
+            tel.flight.record(
+                "attribution", backend="rejection", M=m,
+                host_gap_frac=rep.host_gap_frac,
+                dispatches_per_tick=row["dispatches_per_tick"],
+                n_ticks=rep.n_ticks)
+            blobs.append({"backend": "rejection", "M": m, "K": k,
+                          "report": rep.to_dict(),
+                          "roofline": row["roofline"],
+                          "accounting": delta,
+                          "table": rep.format_table(),
+                          "flight": tel.flight.events("attribution")})
+            print(f"--- rejection M=2^{int(np.log2(m))} ---")
+            print(rep.format_table())
+
+    # --------------------------------------------------------------- mcmc
+    m = ms[-1]
+    v, b, d = synthetic_features(m, k // 2, seed=0)
+    scale = 1.0 / np.sqrt(m)
+    sampler = preprocess(v * scale, b * scale, d, block=64)
+    tel = Telemetry(profile=True)
+    eng = SamplerEngine(sampler, backend="mcmc", n_slots=n_slots,
+                        mcmc_burn_in=4096, mcmc_thin=mcmc_steps,
+                        mcmc_steps_per_tick=mcmc_steps, telemetry=tel)
+    for i in range(n_slots):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    eng.step()
+    delta, log_dir = _profiled_ticks(eng)
+    rep = None
+    if log_dir is not None:
+        maps = prof_capture.compiled_scope_maps([
+            (mcmc_core.run_chains,
+             (eng.sp, jnp.asarray(eng.slot_key), eng._states),
+             dict(n_steps=mcmc_steps, fixed=eng.mcmc_k is not None,
+                  p_swap=eng.mcmc_p_swap,
+                  refresh_every=eng.mcmc_refresh_every)),
+        ])
+        rep = attribute(load_trace(prof_capture.trace_path(log_dir)),
+                        scope_maps=maps)
+        assert rep.dispatches_total == delta["dispatches_total"], (
+            "mcmc accounting disagrees with the captured trace",
+            rep.dispatches, delta["dispatches"])
+    row = _profile_row("mcmc", m, k, n_slots, None, n_ticks, delta, rep,
+                       prof_cost.phase_costs_mcmc(
+                           k, n_slots * mcmc_steps * n_ticks))
+    rows.append(row)
+    if rep is not None:
+        print(f"--- mcmc M=2^{int(np.log2(m))} ---")
+        print(rep.format_table())
+        blobs.append({"backend": "mcmc", "M": m, "K": k,
+                      "report": rep.to_dict(),
+                      "roofline": row["roofline"], "accounting": delta,
+                      "table": rep.format_table()})
+
+    if report_path:
+        with open(report_path, "w") as f:
+            json.dump({"reports": blobs}, f, indent=2)
+        print(f"wrote attribution report: {report_path}")
+    if out_rows is not None:
+        out_rows.extend(rows)
+    return rows
+
+
+def _profile_row(backend, m, k, n_slots, n_spec, n_ticks, delta, rep,
+                 costs) -> Dict:
+    """One committed BENCH_profile row: exact accounting + attribution."""
+    row = dict(
+        backend=backend, M=m, K=k, n_slots=n_slots, n_ticks=n_ticks,
+        dispatches_per_tick=delta["dispatches_total"] / n_ticks,
+        h2d_bytes_per_tick=delta["h2d_bytes"] // n_ticks,
+        d2h_bytes_per_tick=delta["d2h_bytes"] // n_ticks,
+        dispatches=delta["dispatches"],
+        rounds=None, dispatches_per_round=None, tick_wall_ms=None,
+        device_busy_ms=None, host_gap_ms=None, host_gap_frac=None,
+        phases=None, device=None, roofline=None,
+    )
+    if n_spec is not None:
+        row["n_spec"] = n_spec
+    if rep is not None:
+        from repro.obs.prof import cost as prof_cost
+
+        row.update(
+            rounds=rep.rounds,
+            dispatches_per_round=rep.dispatches_total / max(1, rep.rounds),
+            tick_wall_ms=rep.wall_us / 1e3 / max(1, rep.n_ticks),
+            device_busy_ms=rep.device_busy_us / 1e3,
+            host_gap_ms=rep.host_gap_us / 1e3,
+            host_gap_frac=rep.host_gap_frac,
+            phases=rep.phases,
+            device=rep.device,
+            roofline=prof_cost.join(rep.device, costs),
+        )
+    disp = row["dispatches_per_tick"]
+    gap = row["host_gap_frac"]
+    print(f"{backend:10s} M=2^{int(np.log2(m)):2d} "
+          f"dispatches/tick={disp:.2f} "
+          f"h2d={row['h2d_bytes_per_tick']}B d2h={row['d2h_bytes_per_tick']}B"
+          + (f" host_gap={gap:.1%}" if gap is not None else ""))
+    return row
+
+
 def run_learned(k: int = 4, n_requests: int = 64, smoke: bool = False):
     """Learned-kernel rejection rates: ONDPP vs unconstrained NDPP on the
     same basket data (the paper's Section 5 argument, measured).
@@ -727,7 +920,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode",
                     choices=["latency", "batched", "mcmc", "sharded",
-                             "catalog", "learned", "serve", "both", "all"],
+                             "catalog", "learned", "serve", "profile",
+                             "both", "all"],
                     default="both")
     ap.add_argument("--n-requests", type=int, default=64)
     ap.add_argument("--n-spec", type=int, default=None,
@@ -739,6 +933,11 @@ if __name__ == "__main__":
                     help="seconds-scale sweeps (doc snippets / CI)")
     ap.add_argument("--out", default="BENCH_sampling.json",
                     help="machine-readable results path ('' disables)")
+    ap.add_argument("--profile-out", default="BENCH_profile.json",
+                    help="results path for --mode profile ('' disables)")
+    ap.add_argument("--profile-report", default="",
+                    help="attribution-report JSON artifact path for "
+                         "--mode profile (CI uploads this)")
     args = ap.parse_args()
     modes = {
         "latency": ("latency",),
@@ -748,9 +947,10 @@ if __name__ == "__main__":
         "catalog": ("catalog",),
         "learned": ("learned",),
         "serve": ("serve",),
+        "profile": ("profile",),
         "both": ("latency", "batched"),
         "all": ("latency", "batched", "mcmc", "sharded", "catalog",
-                "learned", "serve"),
+                "learned", "serve", "profile"),
     }[args.mode]
     if "sharded" in modes and args.devices > 1:
         # must land before the first jax backend touch in this process;
@@ -784,7 +984,46 @@ if __name__ == "__main__":
     if "serve" in modes:
         results["serve"] = run_serve(n_requests=args.n_requests,
                                      n_spec=args.n_spec, smoke=args.smoke)
-    if args.out:
+    profile_rows = None
+    if "profile" in modes:
+        profile_rows = run_profile(smoke=args.smoke,
+                                   report_path=args.profile_report)
+
+    def _git_meta():
+        """Git provenance for BENCH meta blocks: every committed bench
+        row becomes attributable to a commit (+ a dirty flag so numbers
+        from uncommitted trees are labelled as such)."""
+        import subprocess
+        try:
+            head = subprocess.run(["git", "rev-parse", "HEAD"],
+                                  capture_output=True, text=True, timeout=10)
+            if head.returncode != 0:
+                return {}
+            stat = subprocess.run(["git", "status", "--porcelain"],
+                                  capture_output=True, text=True, timeout=10)
+            return {"git_commit": head.stdout.strip(),
+                    "git_dirty": (bool(stat.stdout.strip())
+                                  if stat.returncode == 0 else True)}
+        except (OSError, subprocess.SubprocessError):
+            return {}
+
+    def _bench_meta():
+        meta = {
+            "bench": "sampling_time",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "unix_time": int(time.time()),
+            "args": vars(args),
+        }
+        meta.update(_git_meta())
+        return meta
+
+    if profile_rows is not None and args.profile_out:
+        with open(args.profile_out, "w") as f:
+            json.dump({"meta": _bench_meta(),
+                       "modes": {"profile": profile_rows}}, f, indent=2)
+        print(f"wrote {args.profile_out}")
+    if args.out and results:
         # merge into any existing file so a partial-mode run never drops
         # another mode's tracked rows (e.g. `--mode batched` keeps the
         # committed mcmc sweep)
@@ -795,16 +1034,7 @@ if __name__ == "__main__":
         except (OSError, ValueError):
             pass
         merged.update(results)
-        payload = {
-            "meta": {
-                "bench": "sampling_time",
-                "backend": jax.default_backend(),
-                "jax": jax.__version__,
-                "unix_time": int(time.time()),
-                "args": vars(args),
-            },
-            "modes": merged,
-        }
+        payload = {"meta": _bench_meta(), "modes": merged}
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.out} (modes: {', '.join(merged)})")
@@ -836,5 +1066,25 @@ if __name__ == "__main__":
                 "committed serve row lacks SLO fields", missing)
             assert srow["slo_ok"] is True, (
                 "committed serve row violates its own SLO", srow)
+        # PR 9: committed profile rows must carry the exact accounting
+        # columns, and the rejection engine stays at 2 dispatches/tick
+        # until the fused-megakernel roadmap item deliberately moves it
+        # (that PR edits this assertion and the strict pins together)
+        try:
+            with open("BENCH_profile.json") as f:
+                prof_rows = json.load(f)["modes"].get("profile", [])
+        except OSError:
+            prof_rows = []
+        for prow in prof_rows:
+            missing = {"dispatches_per_tick", "h2d_bytes_per_tick",
+                       "d2h_bytes_per_tick", "n_ticks",
+                       "backend"} - set(prow)
+            assert not missing, (
+                "committed profile row lacks accounting fields", missing)
+            if prow["backend"] == "rejection":
+                assert prow["dispatches_per_tick"] == 2.0, (
+                    "rejection dispatches/tick moved — if this is the "
+                    "megakernel PR, update the pins deliberately", prow)
         print("smoke: committed BENCH rows carry registry "
-              "histogram/percentile fields and serve SLO columns")
+              "histogram/percentile fields, serve SLO columns, and "
+              "profile accounting columns")

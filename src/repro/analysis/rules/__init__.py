@@ -3,6 +3,7 @@ from . import (  # noqa: F401
     determinism,
     observability,
     pallas,
+    profiling,
     recompile,
     rng,
     tracer,

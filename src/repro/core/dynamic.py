@@ -166,15 +166,21 @@ def _spec_round_dual(prop: DualProposal, live_sp: SpectralNDPP,
     request's draw is independent of which proposal version served it —
     as long as that version's arrays are the ones passed here (the
     engine's version pinning)."""
+    # scope names from the repro.obs.prof.phases catalog (free HLO
+    # metadata; core stays import-free of repro.obs)
     ks = jax.vmap(jax.random.split)(keys)
-    items, mask = sample_proposal_dpp_batch(prop.tree, ks[:, 0],
-                                            dual_u=prop.u)
-    live_x = live_sp.x_matrix()
-    log_ratio, _ = jax.vmap(
-        lambda i, m: log_det_ratio(prop.sp, i, m, live_z=live_sp.Z,
-                                   live_x=live_x))(items, mask)
-    u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
-    accept = jnp.log(u) <= log_ratio
+    with jax.named_scope("ndpp.proposal"):
+        items, mask = sample_proposal_dpp_batch(prop.tree, ks[:, 0],
+                                                dual_u=prop.u)
+    with jax.named_scope("ndpp.logdet_ratio"):
+        live_x = live_sp.x_matrix()
+        log_ratio, _ = jax.vmap(
+            lambda i, m: log_det_ratio(prop.sp, i, m, live_z=live_sp.Z,
+                                       live_x=live_x))(items, mask)
+    with jax.named_scope("ndpp.accept"):
+        u = jax.vmap(
+            lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
+        accept = jnp.log(u) <= log_ratio
     return items, mask, accept
 
 
@@ -199,19 +205,23 @@ def _spec_round_dual_sharded(prop: DualProposal, live_sp: SpectralNDPP,
 
     def inner(p_loc, live_loc, keys):
         ks = jax.vmap(jax.random.split)(keys)
-        items, mask = sample_proposal_dpp_batch(
-            p_loc.tree, ks[:, 0], axis_name="model", m_pad_global=m_pad,
-            dual_u=p_loc.u)
-        zy = msh.gather_rows(p_loc.sp.Z, items, mask, axis_name=z_axis)
-        zy_live = msh.gather_rows(live_loc.Z, items, mask, axis_name=z_axis)
-        live_x = live_loc.x_matrix()
-        log_ratio, _ = jax.vmap(
-            lambda a, b, m_: _log_det_ratio_rows(
-                p_loc.sp, a, m_, live_rows=b, live_x=live_x)
-        )(zy, zy_live, mask)
-        u = jax.vmap(
-            lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
-        accept = jnp.log(u) <= log_ratio
+        with jax.named_scope("ndpp.proposal"):
+            items, mask = sample_proposal_dpp_batch(
+                p_loc.tree, ks[:, 0], axis_name="model", m_pad_global=m_pad,
+                dual_u=p_loc.u)
+        with jax.named_scope("ndpp.logdet_ratio"):
+            zy = msh.gather_rows(p_loc.sp.Z, items, mask, axis_name=z_axis)
+            zy_live = msh.gather_rows(live_loc.Z, items, mask,
+                                      axis_name=z_axis)
+            live_x = live_loc.x_matrix()
+            log_ratio, _ = jax.vmap(
+                lambda a, b, m_: _log_det_ratio_rows(
+                    p_loc.sp, a, m_, live_rows=b, live_x=live_x)
+            )(zy, zy_live, mask)
+        with jax.named_scope("ndpp.accept"):
+            u = jax.vmap(
+                lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
+            accept = jnp.log(u) <= log_ratio
         return items, mask, accept
 
     f = shard_map(inner, mesh=mesh,

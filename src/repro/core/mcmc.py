@@ -378,12 +378,15 @@ def run_chains(sp: SpectralNDPP, chain_keys: jax.Array, states: MCMCState,
     — trajectories are independent of how many calls the steps are split
     across.
     """
-    x = sp.x_matrix()
-    return jax.vmap(
-        lambda k, st: _chain_trace(
-            sp.Z, x, k, st, n_steps=n_steps, fixed=fixed, p_swap=p_swap,
-            refresh_every=refresh_every)
-    )(chain_keys, states)
+    # scope name from the repro.obs.prof.phases catalog (free HLO
+    # metadata; core stays import-free of repro.obs)
+    with jax.named_scope("ndpp.mcmc_step"):
+        x = sp.x_matrix()
+        return jax.vmap(
+            lambda k, st: _chain_trace(
+                sp.Z, x, k, st, n_steps=n_steps, fixed=fixed, p_swap=p_swap,
+                refresh_every=refresh_every)
+        )(chain_keys, states)
 
 
 @functools.partial(
@@ -414,13 +417,14 @@ def run_chains_sharded(sp: SpectralNDPP, chain_keys: jax.Array,
     sp_specs = SpectralNDPP(Z=P("model", None), sigma=P(None))
 
     def inner(sp_loc, ck, st):
-        x = sp_loc.x_matrix()
-        return jax.vmap(
-            lambda k, s_: _chain_trace(
-                sp_loc.Z, x, k, s_, n_steps=n_steps, fixed=fixed,
-                p_swap=p_swap, refresh_every=refresh_every,
-                axis_name="model", m_total=m_total)
-        )(ck, st)
+        with jax.named_scope("ndpp.mcmc_step"):
+            x = sp_loc.x_matrix()
+            return jax.vmap(
+                lambda k, s_: _chain_trace(
+                    sp_loc.Z, x, k, s_, n_steps=n_steps, fixed=fixed,
+                    p_swap=p_swap, refresh_every=refresh_every,
+                    axis_name="model", m_total=m_total)
+            )(ck, st)
 
     f = shard_map(inner, mesh=mesh, in_specs=(sp_specs, P(None), P(None)),
                   out_specs=P(None), check_rep=False)

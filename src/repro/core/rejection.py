@@ -11,6 +11,7 @@ of M.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import NamedTuple, Optional, Tuple
@@ -32,6 +33,11 @@ from .tree import (
     shard_tree,
     tree_shard_specs,
 )
+
+
+#: shared no-op context for drivers whose observer has no ``phase`` hook
+#: (one object, reused — never a per-round allocation)
+_NO_PHASE = contextlib.nullcontext()
 
 
 class RejectionSample(NamedTuple):
@@ -218,11 +224,17 @@ def _spec_round(sampler: NDPPSampler, keys: jax.Array):
     """One speculative round: draw one proposal per key (batched tree
     traversal), score all of them with one batched log-det ratio, and flip
     each acceptance coin.  Returns (items, mask, accept), leading dim N."""
+    # scope names from the repro.obs.prof.phases catalog (free HLO
+    # metadata; core stays import-free of repro.obs)
     ks = jax.vmap(jax.random.split)(keys)
-    items, mask = sample_proposal_dpp_batch(sampler.tree, ks[:, 0])
-    log_ratio, _ = log_det_ratio_batch(sampler.sp, items, mask)
-    u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
-    accept = jnp.log(u) <= log_ratio
+    with jax.named_scope("ndpp.proposal"):
+        items, mask = sample_proposal_dpp_batch(sampler.tree, ks[:, 0])
+    with jax.named_scope("ndpp.logdet_ratio"):
+        log_ratio, _ = log_det_ratio_batch(sampler.sp, items, mask)
+    with jax.named_scope("ndpp.accept"):
+        u = jax.vmap(
+            lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
+        accept = jnp.log(u) <= log_ratio
     return items, mask, accept
 
 
@@ -258,13 +270,17 @@ def _spec_round_sharded(sampler: NDPPSampler, keys: jax.Array, mesh: Mesh):
 
     def inner(s_loc, keys):
         ks = jax.vmap(jax.random.split)(keys)
-        items, mask = sample_proposal_dpp_batch(
-            s_loc.tree, ks[:, 0], axis_name="model", m_pad_global=m_pad)
-        zy = msh.gather_rows(s_loc.sp.Z, items, mask, axis_name=z_axis)
-        log_ratio, _ = jax.vmap(
-            lambda r_, m_: _log_det_ratio_rows(s_loc.sp, r_, m_))(zy, mask)
-        u = jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
-        accept = jnp.log(u) <= log_ratio
+        with jax.named_scope("ndpp.proposal"):
+            items, mask = sample_proposal_dpp_batch(
+                s_loc.tree, ks[:, 0], axis_name="model", m_pad_global=m_pad)
+        with jax.named_scope("ndpp.logdet_ratio"):
+            zy = msh.gather_rows(s_loc.sp.Z, items, mask, axis_name=z_axis)
+            log_ratio, _ = jax.vmap(
+                lambda r_, m_: _log_det_ratio_rows(s_loc.sp, r_, m_))(zy, mask)
+        with jax.named_scope("ndpp.accept"):
+            u = jax.vmap(
+                lambda k: jax.random.uniform(k, dtype=jnp.float32))(ks[:, 1])
+            accept = jnp.log(u) <= log_ratio
         return items, mask, accept
 
     f = shard_map(inner, mesh=mesh, in_specs=in_specs,
@@ -381,9 +397,13 @@ def drive_rounds(
     proposals=, accepts=)`` and one ``on_retire(trials=, accepted=)`` per
     request leaving the pending set, all with plain host ints (the stats
     piggyback on arrays this loop already transfers, so observation adds
-    no sync points and cannot perturb the draws).  ``core`` stays free of
-    telemetry imports; pass e.g. ``repro.obs.RegistryObserver``.
+    no sync points and cannot perturb the draws).  An observer may also
+    provide a ``phase(name)`` context-manager hook (profiler scopes: the
+    round dispatch and the harvest sync get named ranges —
+    ``repro.obs.prof.phases``).  ``core`` stays free of telemetry
+    imports; pass e.g. ``repro.obs.RegistryObserver``.
     """
+    phase = getattr(observer, "phase", None) or (lambda name: _NO_PHASE)
     n = req_keys.shape[0]
     items_out = np.full((n, r), -1, np.int32)
     mask_out = np.zeros((n, r), bool)
@@ -403,16 +423,18 @@ def drive_rounds(
             act_keys = jnp.concatenate(
                 [act_keys, jnp.broadcast_to(act_keys[:1], (n_pad - n_act, 2))]
             )
-        keys = _fanout_keys(
-            act_keys,
-            jnp.full((n_pad,), spent, jnp.uint32),
-            jnp.arange(cur, dtype=jnp.uint32),
-        )
-        items, mask, accept = round_fn(keys)
+        with phase("round_dispatch"):
+            keys = _fanout_keys(
+                act_keys,
+                jnp.full((n_pad,), spent, jnp.uint32),
+                jnp.arange(cur, dtype=jnp.uint32),
+            )
+            items, mask, accept = round_fn(keys)
         # the one designed device→host sync per round (ROADMAP item 2 is
         # the fused megakernel that removes it); explicit so transfer
         # guards see it as intentional
-        items_h, mask_h, acc = jax.device_get((items, mask, accept))
+        with phase("harvest"):
+            items_h, mask_h, acc = jax.device_get((items, mask, accept))
         acc = acc.reshape(n_pad, cur)[:n_act]
         items_h = items_h.reshape(n_pad, cur, r)[:n_act]
         mask_h = mask_h.reshape(n_pad, cur, r)[:n_act]

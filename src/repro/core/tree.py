@@ -496,23 +496,28 @@ def sample_elementary_batch(
         us = jax.vmap(
             lambda k: jax.random.uniform(k, (depth,), dtype=tree.W.dtype)
         )(kk[:, 0])
-        blk = _descend_batch(tree, q, us, axis_name=axis_name)  # (N,)
-        if not w_sharded:
-            rows = blk[:, None] * tree.block + blk_ar[None, :]  # (N, block)
-            w_blk = tree.W[rows]                                # (N, block, R)
-            scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
-        else:
-            bps = w_rows // tree.block             # blocks per shard
-            base_blk = shard * bps
-            own = (blk >= base_blk) & (blk < base_blk + bps)
-            loc = jnp.clip(blk - base_blk, 0, bps - 1)
-            rows = loc[:, None] * tree.block + blk_ar[None, :]
-            w_blk = tree.W[rows]
-            raw = jnp.where(own[:, None], _leaf_scores_batch(w_blk, q), 0.0)
-            scores = jnp.maximum(jax.lax.psum(raw, axis_name), 0.0)
-        j_local = jax.vmap(jax.random.categorical)(
-            kk[:, 1], jnp.log(scores + 1e-30)
-        )
+        # named scopes are compile-time HLO metadata (free at runtime);
+        # names come from the repro.obs.prof.phases catalog — core stays
+        # import-free of repro.obs
+        with jax.named_scope("ndpp.tree_descent"):
+            blk = _descend_batch(tree, q, us, axis_name=axis_name)  # (N,)
+        with jax.named_scope("ndpp.leaf_scoring"):
+            if not w_sharded:
+                rows = blk[:, None] * tree.block + blk_ar[None, :]  # (N, block)
+                w_blk = tree.W[rows]                                # (N, block, R)
+                scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
+            else:
+                bps = w_rows // tree.block             # blocks per shard
+                base_blk = shard * bps
+                own = (blk >= base_blk) & (blk < base_blk + bps)
+                loc = jnp.clip(blk - base_blk, 0, bps - 1)
+                rows = loc[:, None] * tree.block + blk_ar[None, :]
+                w_blk = tree.W[rows]
+                raw = jnp.where(own[:, None], _leaf_scores_batch(w_blk, q), 0.0)
+                scores = jnp.maximum(jax.lax.psum(raw, axis_name), 0.0)
+            j_local = jax.vmap(jax.random.categorical)(
+                kk[:, 1], jnp.log(scores + 1e-30)
+            )
         j = blk * tree.block + j_local
         w_j = _gather_row(tree.W, j,
                           axis_name if w_sharded else None)     # (N, R)

@@ -36,13 +36,19 @@ from repro.obs.metrics import (
 )
 from repro.obs.recorder import FlightRecorder
 from repro.obs.spans import Span, now
-from repro.obs.trace import PROFILE_ENV, profiling_enabled, tick_annotation
+from repro.obs.trace import (
+    PHASE_PREFIX,
+    PROFILE_ENV,
+    phase_annotation,
+    profiling_enabled,
+    tick_annotation,
+)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "LogHistogram", "MetricRegistry",
     "FlightRecorder", "Span", "now", "Telemetry", "RegistryObserver",
-    "engine_instruments", "PROFILE_ENV", "profiling_enabled",
-    "tick_annotation",
+    "engine_instruments", "PROFILE_ENV", "PHASE_PREFIX",
+    "profiling_enabled", "tick_annotation", "phase_annotation",
 ]
 
 
@@ -88,6 +94,16 @@ def engine_instruments(registry: MetricRegistry) -> types.SimpleNamespace:
                 "catalog versions installed via swap_catalog"),
         mcmc_steps=c("ndpp_mcmc_steps_total",
                      "MH steps advanced across all chains"),
+        dispatches=c("ndpp_dispatches_total",
+                     "executable launches at the engine call boundary — "
+                     "the per-tick count the fused-megakernel roadmap "
+                     "item must drive to 1 (repro.obs.prof.accounting)",
+                     ("backend", "fn")),
+        transfer=c("ndpp_transfer_bytes_total",
+                   "host<->device bytes at the engine call boundary "
+                   "(h2d: numpy leaves entering jitted calls / puts; "
+                   "d2h: the designed per-tick device_get harvest)",
+                   ("backend", "direction")),
         queue_depth=g("ndpp_queue_depth", "requests waiting for a slot"),
         slots_occupied=g("ndpp_slots_occupied",
                          "slots holding an in-flight request"),
@@ -143,6 +159,14 @@ class Telemetry:
     def profile_tick(self, name: str):
         return tick_annotation(name, self.profile)
 
+    def phase(self, name: str):
+        """Profiler scope for one engine phase (``ndpp_phase/<name>``).
+
+        Phase names come from ``repro.obs.prof.phases``; a no-op unless
+        profiling was enabled at construction.
+        """
+        return phase_annotation(name, self.profile)
+
     def on_error(self) -> Optional[str]:
         """Dump the flight recorder to ``dump_on_error`` (if configured)."""
         if self.dump_on_error is None:
@@ -166,6 +190,12 @@ class RegistryObserver:
         self.registry = registry
         self.backend = backend
         self._m = engine_instruments(registry)
+        self._profile = profiling_enabled()
+
+    def phase(self, name: str):
+        """Profiler scope around a sampler phase (``drive_rounds`` uses
+        this duck-typed hook for its round-dispatch/harvest sections)."""
+        return phase_annotation(name, self._profile)
 
     def on_round(self, *, n_active: int, n_spec: int, proposals: int,
                  accepts: int) -> None:

@@ -1,0 +1,39 @@
+"""Device-level performance observatory for the NDPP serving stack.
+
+Three legs (see docs/profiling.md):
+
+  * **phase attribution** — the phase catalog (:mod:`.phases`), gated
+    ``TraceAnnotation`` scopes threaded through the engine tick, and a
+    capture (:mod:`.capture`) + parse (:mod:`.parse`) pipeline turning
+    a ``jax.profiler`` trace into an :class:`~.parse.AttributionReport`
+    (per-phase device busy time, host-gap fraction, dispatches per
+    speculative round);
+  * **dispatch/transfer accounting** (:mod:`.accounting`) — exact
+    executable-launch and h2d/d2h byte counts at the engine call
+    boundary, streamed into ``ndpp_dispatches_total`` /
+    ``ndpp_transfer_bytes_total``;
+  * **cost-model join + gating** — analytic roofline terms per scope
+    (:mod:`.cost`), the BENCH schema (:mod:`.schema`) and the
+    regression differ (:mod:`.benchdiff`) behind ``tools/benchdiff``.
+"""
+from __future__ import annotations
+
+from repro.obs.prof import phases
+from repro.obs.prof.accounting import (
+    NULL_ACCOUNTANT,
+    Accountant,
+    host_nbytes,
+)
+from repro.obs.prof.parse import (
+    AttributionReport,
+    attribute,
+    complete_events,
+    hlo_scope_map,
+    load_trace,
+)
+
+__all__ = [
+    "phases", "Accountant", "NULL_ACCOUNTANT", "host_nbytes",
+    "AttributionReport", "attribute", "complete_events", "hlo_scope_map",
+    "load_trace",
+]

@@ -1,0 +1,196 @@
+"""Dispatch and transfer accounting at the engine call boundary.
+
+Why not an interception hook?  jax 0.4.x dispatches warm jitted calls
+through the C++ pjit fastpath, which bypasses every Python-level seam:
+monkeypatching ``pxla.ExecuteReplicated.__call__`` or ``shard_args``
+observes *zero* events after the first call, ``jax.monitoring`` emits
+only compile events, and there is no config knob that disables the
+fastpath.  So instead of intercepting the runtime, the engine routes
+its own device interactions through an :class:`Accountant` — and the
+counts are *proven* rather than asserted by a test that cross-validates
+them against ``TfrtCpuExecutable::Execute`` / ``PjitFunction`` events
+in a real profiler capture (tests/test_prof.py).
+
+The accounting identities (the engine's structure makes them exact):
+
+  * **dispatch** — one warm Python call to a jitted function is exactly
+    one executable launch; :meth:`Accountant.call` counts it and tags it
+    with the function label (``ndpp_dispatches_total{backend,fn}``).
+  * **h2d** — host bytes cross to the device exactly when a numpy leaf
+    is passed into a jitted call (argument transfer) or explicitly
+    converted (:meth:`Accountant.put`); both sum ``.nbytes`` of the
+    numpy leaves into ``ndpp_transfer_bytes_total{direction="h2d"}``.
+  * **d2h** — device bytes come back only through the engine's designed
+    per-tick sync; :meth:`Accountant.device_get` wraps it and sums the
+    ``.nbytes`` of the fetched numpy leaves into ``direction="d2h"``.
+
+``ndpp_dispatches_total`` per tick is the number ROADMAP item 1's fused
+megakernel must drive to 1; the strict-mode tests in
+tests/test_compile_cache.py pin today's exact per-tick values for both
+backends so any change — regression or fusion win — is loud.
+
+A shared :data:`NULL_ACCOUNTANT` with the same interface serves the
+uninstrumented engine path, so engine code is uniform and the bare
+engine stays a straight-through call (bit-identical draws, no counting
+overhead beyond an attribute hop).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def host_nbytes(tree) -> int:
+    """Total ``.nbytes`` of the *host* (numpy) leaves of a pytree.
+
+    jax Arrays are already device-resident and transfer nothing when
+    passed to a jitted call; only numpy arrays/scalars cross.
+    """
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if isinstance(leaf, (np.ndarray, np.generic)):
+            total += int(leaf.nbytes)
+    return total
+
+
+class Accountant:
+    """Counts executable launches and h2d/d2h bytes at the call boundary.
+
+    Args:
+      backend: label value for the engine backend ("rejection"/"mcmc").
+      instruments: the ``engine_instruments`` namespace — when given,
+        counts also stream into ``ndpp_dispatches_total`` and
+        ``ndpp_transfer_bytes_total`` on the shared registry.
+    """
+
+    def __init__(self, backend: str = "rejection", instruments=None):
+        self.backend = backend
+        self._m = instruments
+        self.dispatches: Dict[str, int] = {}
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+
+    # ------------------------------------------------------------- recording
+    def call(self, label: str, fn, *args, **kw):
+        """Invoke jitted ``fn`` — one dispatch, numpy args count as h2d."""
+        nb = host_nbytes((args, kw))
+        self.dispatches[label] = self.dispatches.get(label, 0) + 1
+        self.h2d_bytes += nb
+        if self._m is not None:
+            self._m.dispatches.inc(backend=self.backend, fn=label)
+            if nb:
+                self._m.transfer.inc(nb, backend=self.backend,
+                                     direction="h2d")
+        return fn(*args, **kw)
+
+    def put(self, label: str, x):
+        """Place a host value on device — a transfer, not a dispatch."""
+        nb = host_nbytes(x)
+        self.h2d_bytes += nb
+        if self._m is not None and nb:
+            self._m.transfer.inc(nb, backend=self.backend, direction="h2d")
+        return jnp.asarray(x)
+
+    def device_get(self, tree):
+        """The engine's designed device→host sync, with d2h byte counts."""
+        out = jax.device_get(tree)
+        nb = host_nbytes(out)
+        self.d2h_bytes += nb
+        if self._m is not None and nb:
+            self._m.transfer.inc(nb, backend=self.backend, direction="d2h")
+        return out
+
+    # --------------------------------------------------------------- queries
+    @property
+    def dispatches_total(self) -> int:
+        return sum(self.dispatches.values())
+
+    def totals(self) -> dict:
+        """JSON-safe snapshot of everything counted so far."""
+        return {
+            "backend": self.backend,
+            "dispatches": dict(sorted(self.dispatches.items())),
+            "dispatches_total": self.dispatches_total,
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
+        }
+
+    @contextlib.contextmanager
+    def measure(self):
+        """Delta measurement over a region (CompileCounter-style).
+
+        Yields a :class:`_Measurement` whose properties report counts
+        accumulated since entry — read them after the ``with`` block.
+        """
+        m = _Measurement(self)
+        yield m
+
+    def delta(self, since: dict) -> dict:
+        """Difference of :meth:`totals` against an earlier snapshot."""
+        d = {k: self.dispatches.get(k, 0) - since["dispatches"].get(k, 0)
+             for k in set(self.dispatches) | set(since["dispatches"])}
+        return {
+            "backend": self.backend,
+            "dispatches": {k: v for k, v in sorted(d.items()) if v},
+            "dispatches_total": (self.dispatches_total
+                                 - since["dispatches_total"]),
+            "h2d_bytes": self.h2d_bytes - since["h2d_bytes"],
+            "d2h_bytes": self.d2h_bytes - since["d2h_bytes"],
+        }
+
+
+class _Measurement:
+    """Live delta view over an :class:`Accountant` region."""
+
+    def __init__(self, acct: Accountant):
+        self._acct = acct
+        self._since = acct.totals()
+
+    @property
+    def dispatches(self) -> Dict[str, int]:
+        return self._acct.delta(self._since)["dispatches"]
+
+    @property
+    def dispatches_total(self) -> int:
+        return self._acct.dispatches_total - self._since["dispatches_total"]
+
+    @property
+    def h2d_bytes(self) -> int:
+        return self._acct.h2d_bytes - self._since["h2d_bytes"]
+
+    @property
+    def d2h_bytes(self) -> int:
+        return self._acct.d2h_bytes - self._since["d2h_bytes"]
+
+    def totals(self) -> dict:
+        return self._acct.delta(self._since)
+
+
+class _NullAccountant:
+    """Interface twin of :class:`Accountant` that counts nothing.
+
+    The bare (``telemetry=None``) engine routes through this so the hot
+    path has no branches — just straight-through calls.
+    """
+
+    backend = ""
+
+    @staticmethod
+    def call(label, fn, *args, **kw):
+        return fn(*args, **kw)
+
+    @staticmethod
+    def put(label, x):
+        return jnp.asarray(x)
+
+    @staticmethod
+    def device_get(tree):
+        return jax.device_get(tree)
+
+
+#: shared no-op accountant for the uninstrumented engine path
+NULL_ACCOUNTANT = _NullAccountant()

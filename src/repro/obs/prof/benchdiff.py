@@ -1,0 +1,205 @@
+"""Noise-aware diffing of BENCH_*.json artifacts (``tools/benchdiff``).
+
+Turns the committed bench files from a write-only log into a guarded
+trajectory: ``benchdiff BASELINE NEW`` matches rows by their identity
+fields (mode + M/K/backend/...), then compares field-by-field with
+per-field semantics —
+
+  * **exact fields** (configuration and correctness bits: ``n_spec``,
+    ``within_bound``, ``slo_ok``, ``dispatches_per_tick``, ...) must
+    match bit-for-bit → hard failure;
+  * **directional wall-clock fields** (``*_s``/``*_ms`` lower-better,
+    ``*_sps``/``*_qps``/``speedup`` higher-better) regress only beyond
+    a relative tolerance band (default ±50%, sized for cross-machine
+    noise) → failure, or a warning under ``--warn-only-wall`` (the CI
+    smoke gate: different runner, honest noise);
+  * everything else numeric drifts → always warning-only.
+
+Rows present only in the baseline are reported, not failed — smoke runs
+measure a subset.  ``--validate FILE...`` runs the
+``repro.obs.prof.schema`` envelope check instead (hard-fail on schema
+errors).  Exit codes: 0 ok, 1 regression/validation failure, 2 usage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+from . import schema
+
+#: row-identity fields — a row's key is the subset of these it carries
+KEY_FIELDS = ("model", "backend", "phase", "M", "K", "n_devices",
+              "n_requests", "n_spec", "update_batch", "load_frac")
+
+#: must match exactly between baseline and new (config + correctness)
+EXACT_FIELDS = frozenset({
+    "steps", "n_pairs", "n_test_baskets", "rank_bound", "within_bound",
+    "slo_ok", "mcmc_steps_per_sample", "block", "n_slots", "n_ticks",
+    "dispatches_per_tick", "dispatches_per_round", "rounds",
+    "h2d_bytes_per_tick", "d2h_bytes_per_tick",
+})
+
+LOWER_BETTER_SUFFIXES = ("_s", "_ms", "_us")
+HIGHER_BETTER_SUFFIXES = ("_sps", "_ps", "_qps", "speedup")
+
+
+def _direction(field: str) -> str:
+    if field.endswith(HIGHER_BETTER_SUFFIXES):
+        return "higher"
+    if field.endswith(LOWER_BETTER_SUFFIXES):
+        return "lower"
+    return "neutral"
+
+
+def _row_key(row: dict) -> Tuple:
+    return tuple((k, row[k]) for k in KEY_FIELDS if k in row)
+
+
+def _fmt_key(key: Tuple) -> str:
+    return ",".join(f"{k}={v}" for k, v in key) or "<unkeyed>"
+
+
+class Diff:
+    """Accumulated comparison outcome."""
+
+    def __init__(self):
+        self.failures: List[str] = []
+        self.warnings: List[str] = []
+        self.notes: List[str] = []
+        self.compared = 0
+
+    def report(self, out=None) -> None:
+        out = sys.stdout if out is None else out
+        for line in self.failures:
+            print(f"FAIL  {line}", file=out)
+        for line in self.warnings:
+            print(f"warn  {line}", file=out)
+        for line in self.notes:
+            print(f"note  {line}", file=out)
+        verdict = "REGRESSION" if self.failures else "ok"
+        print(f"{verdict}: {self.compared} row(s) compared, "
+              f"{len(self.failures)} failure(s), "
+              f"{len(self.warnings)} warning(s)", file=out)
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.failures else 0
+
+
+def compare(baseline: dict, new: dict, rel_tol: float = 0.5,
+            warn_only_wall: bool = False, mode: str = "") -> Diff:
+    """Compare two parsed BENCH payloads; see module doc for semantics."""
+    diff = Diff()
+    base_modes = baseline.get("modes", {})
+    new_modes = new.get("modes", {})
+    modes = [mode] if mode else sorted(set(base_modes) | set(new_modes))
+    for m in modes:
+        b_rows = {_row_key(r): r for r in base_modes.get(m, [])}
+        n_rows = {_row_key(r): r for r in new_modes.get(m, [])}
+        for key in sorted(set(b_rows) - set(n_rows), key=str):
+            diff.notes.append(f"{m}[{_fmt_key(key)}]: only in baseline")
+        for key in sorted(set(n_rows) - set(b_rows), key=str):
+            diff.notes.append(f"{m}[{_fmt_key(key)}]: new row")
+        for key in sorted(set(b_rows) & set(n_rows), key=str):
+            diff.compared += 1
+            _compare_row(diff, f"{m}[{_fmt_key(key)}]",
+                         b_rows[key], n_rows[key], rel_tol, warn_only_wall)
+    return diff
+
+
+def _compare_row(diff: Diff, where: str, base: dict, new: dict,
+                 rel_tol: float, warn_only_wall: bool) -> None:
+    for field in sorted(set(base) & set(new)):
+        b, n = base[field], new[field]
+        if isinstance(b, dict) or isinstance(n, dict):
+            continue  # nested snapshots (histograms, slo blocks)
+        if b is None or n is None:
+            # an absent measurement (e.g. attribution fields when the
+            # profiler couldn't capture) is degradation, not regression
+            if b != n:
+                diff.notes.append(
+                    f"{where}.{field}: absent on one side ({b!r} -> {n!r})")
+            continue
+        if field in EXACT_FIELDS or isinstance(b, (str, bool)):
+            if b != n:
+                diff.failures.append(
+                    f"{where}.{field}: exact mismatch {b!r} -> {n!r}")
+            continue
+        if not isinstance(b, (int, float)) or not isinstance(n, (int, float)):
+            continue
+        if b == n:
+            continue
+        ref = max(abs(float(b)), 1e-12)
+        direction = _direction(field)
+        if direction == "neutral":
+            if abs(float(n) - float(b)) / ref > rel_tol:
+                diff.warnings.append(
+                    f"{where}.{field}: drift {b:g} -> {n:g}")
+            continue
+        worse = ((float(n) - float(b)) if direction == "lower"
+                 else (float(b) - float(n))) / ref
+        if worse > rel_tol:
+            msg = (f"{where}.{field}: {b:g} -> {n:g} "
+                   f"({worse:+.0%} worse than baseline, tol {rel_tol:.0%})")
+            (diff.warnings if warn_only_wall else diff.failures).append(msg)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchdiff",
+        description="diff or validate BENCH_*.json artifacts")
+    ap.add_argument("files", nargs="+",
+                    help="BASELINE NEW to diff, or files for --validate")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-validate each file instead of diffing")
+    ap.add_argument("--mode", default="",
+                    help="restrict the diff to one bench mode")
+    ap.add_argument("--rel-tol", type=float, default=0.5,
+                    help="relative tolerance band for wall-clock fields")
+    ap.add_argument("--warn-only-wall", action="store_true",
+                    help="downgrade wall-clock regressions to warnings "
+                         "(exact-field mismatches still fail)")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        failed = False
+        for path in args.files:
+            errors, warnings = schema.validate_file(path)
+            for e in errors:
+                print(f"FAIL  {e}")
+            for w in warnings:
+                print(f"warn  {w}")
+            status = "INVALID" if errors else "ok"
+            print(f"{status}: {path} ({len(errors)} error(s), "
+                  f"{len(warnings)} warning(s))")
+            failed = failed or bool(errors)
+        return 1 if failed else 0
+
+    if len(args.files) != 2:
+        ap.error("diff mode takes exactly two files: BASELINE NEW")
+    try:
+        baseline, new = _load(args.files[0]), _load(args.files[1])
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL  cannot load bench file: {e}")
+        return 1
+    for path, payload in zip(args.files, (baseline, new)):
+        errors, _ = schema.validate(payload, label=path)
+        if errors:
+            for e in errors:
+                print(f"FAIL  {e}")
+            return 1
+    diff = compare(baseline, new, rel_tol=args.rel_tol,
+                   warn_only_wall=args.warn_only_wall, mode=args.mode)
+    diff.report()
+    return diff.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""Programmatic profiler capture for attribution runs.
+
+Thin wrapper over ``jax.profiler.trace`` that (a) always requests the
+perfetto/Chrome trace-event artifact the parser consumes, (b) knows
+where the profiler buries it (``plugins/profile/<ts>/``), and (c)
+degrades to a typed :class:`ProfilerUnavailable` instead of a backend
+crash when the profiler can't run (no profiler build, nested capture,
+unwritable dir) — callers like ``benchmarks/sampling_time.py --mode
+profile`` and the cross-validation tests skip attribution rather than
+fail the run.
+
+Capture is strictly opt-in tooling: nothing in the serving path imports
+this module.
+"""
+from __future__ import annotations
+
+import contextlib
+import glob
+import os
+from typing import Dict, Iterable, Tuple
+
+from . import parse
+
+
+class ProfilerUnavailable(RuntimeError):
+    """The jax profiler could not start a capture in this environment."""
+
+
+@contextlib.contextmanager
+def capture(log_dir: str):
+    """Capture a profiler trace of the ``with`` body into ``log_dir``.
+
+    Requests the perfetto artifact (Chrome trace-event JSON) so
+    :func:`trace_path` / ``parse.load_trace`` can consume the capture.
+    Raises :class:`ProfilerUnavailable` if the capture cannot start.
+    """
+    try:
+        from jax import profiler
+        ctx = profiler.trace(log_dir, create_perfetto_trace=True)
+        ctx.__enter__()
+    except (ImportError, RuntimeError, OSError, NotImplementedError,
+            ValueError) as e:
+        raise ProfilerUnavailable(f"jax profiler capture failed: {e}") from e
+    try:
+        yield log_dir
+    finally:
+        ctx.__exit__(None, None, None)
+
+
+def trace_path(log_dir: str) -> str:
+    """Newest trace-event JSON written by a capture under ``log_dir``.
+
+    The profiler writes ``<log_dir>/plugins/profile/<timestamp>/`` with
+    a ``perfetto_trace.json.gz`` (and sometimes ``*.trace.json.gz``);
+    returns the most recently written match.
+    """
+    patterns = ("**/perfetto_trace.json.gz", "**/*.trace.json.gz",
+                "**/*.trace.json")
+    hits = []
+    for pat in patterns:
+        hits.extend(glob.glob(os.path.join(log_dir, pat), recursive=True))
+    if not hits:
+        raise FileNotFoundError(
+            f"no trace-event JSON under {log_dir!r} — did the capture "
+            f"run with create_perfetto_trace=True?")
+    return max(hits, key=os.path.getmtime)
+
+
+def compiled_scope_maps(
+        calls: Iterable[Tuple]) -> Dict[str, Dict[str, str]]:
+    """Merged ``hlo_scope_map`` over compiled jitted calls.
+
+    ``calls`` is an iterable of ``(jitted_fn, args)`` or
+    ``(jitted_fn, args, kwargs)`` tuples — the same call signatures the
+    engine dispatches, so lowering hits the jit cache (no extra
+    compiles on an already-warm engine).  The result maps each HLO
+    module's instruction names to ``ndpp.*`` device scopes for
+    ``parse.attribute``.
+    """
+    maps: Dict[str, Dict[str, str]] = {}
+    for call in calls:
+        fn, args = call[0], call[1]
+        kw = call[2] if len(call) > 2 else {}
+        text = fn.lower(*args, **kw).compile().as_text()
+        maps.update(parse.hlo_scope_map(text))
+    return maps

@@ -1,0 +1,108 @@
+"""Analytic per-phase cost terms and the measured-vs-roofline join.
+
+``benchmarks/roofline.py`` turns HLO cost analysis into machine-time
+terms for the LM dry-run cells; this module does the sampler-side
+counterpart *analytically*: closed-form FLOP/byte counts per device
+scope of one speculative rejection round (or one MCMC chain advance),
+derived from the paper's complexity claims —
+
+  * tree descent: ``log2(M/block)`` levels, each scoring two children
+    against the 2K-dim eigencoefficient vector per trial (the O(K log M)
+    per-sample term of Theorem 1);
+  * leaf scoring: one ``block``-wide bilinear score batch per trial;
+  * log-det ratio: building the 2K×2K subkernel grams and one LU-based
+    ``slogdet`` per trial (the 2K-space acceptance test);
+  * MCMC: O(K²) cached-inverse scoring per MH step.
+
+:func:`join` divides each scope's roofline-bound time (``max(flops/
+peak, bytes/bw)``) by its *measured* device busy time from an
+``AttributionReport``, giving the achieved-vs-roofline fraction per
+(backend, M, K) — the number that tells ROADMAP item 1 how much of the
+gap is kernel quality vs host overhead.
+
+Counts are estimates for trend analysis (exact constants per op are
+backend-dependent); the machine constants default to the same TPU v5e
+numbers as ``benchmarks/roofline.py`` and callers on other hardware
+pass their own.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from . import phases as ph
+
+# mirrors benchmarks/roofline.py (TPU v5e per-chip); override per machine
+PEAK_FLOPS = 197e12
+MEM_BW = 819e9
+
+_F32 = 4  # bytes
+
+
+def phase_costs_rejection(M: int, K: int, n_trials: int,
+                          block: int = 32) -> Dict[str, Dict[str, float]]:
+    """{device scope: {flops, bytes}} for ``n_trials`` rejection trials.
+
+    One engine round runs ``n_trials = n_slots * n_spec`` speculative
+    proposals; each draws from the proposal ONDPP via the tree and runs
+    the 2K-space acceptance test.
+    """
+    k2 = 2 * K
+    levels = max(1, int(math.ceil(math.log2(max(2, M // max(1, block))))))
+    descent_flops = n_trials * levels * 2 * (2 * k2)   # 2 children · dot(2K)
+    descent_bytes = n_trials * levels * 2 * k2 * _F32
+    leaf_flops = n_trials * block * 2 * k2             # bilinear per item
+    leaf_bytes = n_trials * block * k2 * _F32
+    # grams: two K_sel×2K · 2K products (≈ 2·(2K)²·K) + LU slogdet (2K)³/3
+    logdet_flops = n_trials * (2 * k2 * k2 * K + (k2 ** 3) / 3.0)
+    logdet_bytes = n_trials * 2 * k2 * k2 * _F32
+    return {
+        ph.TREE_DESCENT: {"flops": float(descent_flops),
+                          "bytes": float(descent_bytes)},
+        ph.LEAF_SCORING: {"flops": float(leaf_flops),
+                          "bytes": float(leaf_bytes)},
+        ph.LOGDET_RATIO: {"flops": float(logdet_flops),
+                          "bytes": float(logdet_bytes)},
+        ph.ACCEPT: {"flops": float(4 * n_trials),
+                    "bytes": float(8 * n_trials)},
+        ph.PROPOSAL: {"flops": float(descent_flops + leaf_flops),
+                      "bytes": float(descent_bytes + leaf_bytes)},
+    }
+
+
+def phase_costs_mcmc(K: int, steps: int) -> Dict[str, Dict[str, float]]:
+    """{device scope: {flops, bytes}} for ``steps`` total MH steps."""
+    return {
+        ph.MCMC_STEP: {"flops": float(steps * 2 * K * K),
+                       "bytes": float(steps * K * K * _F32)},
+    }
+
+
+def join(device_busy: Dict[str, dict],
+         costs: Dict[str, Dict[str, float]],
+         peak_flops: float = PEAK_FLOPS,
+         mem_bw: float = MEM_BW) -> Dict[str, dict]:
+    """Join measured device busy time against analytic roofline terms.
+
+    ``device_busy`` is ``AttributionReport.device`` ({scope: {ops,
+    busy_us}}); returns per-scope rows with the roofline-bound time and
+    ``achieved_frac = roofline_s / measured_s`` (1.0 ≡ at the roofline,
+    small ≡ far from it).  Scopes measured but not modelled (or vice
+    versa) still appear, with the missing side as None.
+    """
+    out: Dict[str, dict] = {}
+    for scope in sorted(set(device_busy) | set(costs)):
+        measured_s = (device_busy[scope]["busy_us"] * 1e-6
+                      if scope in device_busy else None)
+        row = {"measured_s": measured_s, "flops": None, "bytes": None,
+               "roofline_s": None, "dominant": None, "achieved_frac": None}
+        if scope in costs:
+            flops, byts = costs[scope]["flops"], costs[scope]["bytes"]
+            t_c, t_m = flops / peak_flops, byts / mem_bw
+            row.update(flops=flops, bytes=byts,
+                       roofline_s=max(t_c, t_m),
+                       dominant="compute" if t_c >= t_m else "memory")
+            if measured_s:
+                row["achieved_frac"] = row["roofline_s"] / measured_s
+        out[scope] = row
+    return out

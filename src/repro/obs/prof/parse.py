@@ -1,0 +1,278 @@
+"""Chrome-trace parsing and per-phase attribution.
+
+``jax.profiler.trace(log_dir, create_perfetto_trace=True)`` writes a
+Chrome trace-event JSON (``perfetto_trace.json.gz``) that interleaves
+three event families the observatory cares about:
+
+  * host ``TraceAnnotation`` ranges — our ``ndpp_engine_tick/<backend>``
+    tick spans and ``ndpp_phase/<name>`` phase spans (``obs.trace``);
+  * host dispatch markers — one ``PjitFunction(<fn>)`` complete event
+    per jitted call (emitted by the C++ pjit fastpath too, which is why
+    the *trace* is the ground truth the call-boundary accounting of
+    ``repro.obs.prof.accounting`` is cross-validated against);
+  * device executor events — ``TfrtCpuExecutable::Execute`` spans (one
+    per executable launch) and per-HLO-op events carrying
+    ``args: {hlo_module, hlo_op}``.
+
+:func:`attribute` folds them into an :class:`AttributionReport`:
+per-host-phase wall time, per-device-scope busy time (via the
+``jax.named_scope`` metadata join of :func:`hlo_scope_map`), dispatch
+counts per jitted function, and the host-gap fraction — tick wall time
+the device spent idle between dispatches, ROADMAP item 1's quantity.
+
+Everything here is stdlib-only host code: parsing a committed fixture
+trace needs no profiler and no device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.obs.trace import PHASE_PREFIX
+from . import phases as ph
+
+TICK_PREFIX = "ndpp_engine_tick/"
+#: complete-event names that mark one executable launch on the device
+#: executor, per backend runtime (CPU TFRT, PJRT stream executor)
+EXEC_MARKERS = ("TfrtCpuExecutable::Execute", "ExecuteOnLocalDevices",
+                "PjRtStreamExecutorLoadedExecutable::Execute")
+_PJIT_RE = re.compile(r"^PjitFunction\((.+)\)$")
+
+# HLO text: "  %name.3 = f32[..] op(..), metadata={op_name="..." ...}"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([A-Za-z0-9_.\-]+)\s*=.*?"
+    r"metadata=\{[^}]*op_name=\"([^\"]*)\"")
+_MODULE_RE = re.compile(r"^HloModule\s+([A-Za-z0-9_.\-]+)")
+
+
+def load_trace(path: str) -> List[dict]:
+    """Trace events from a Chrome trace JSON file (optionally .gz).
+
+    Accepts both the ``{"traceEvents": [...]}`` wrapper and a bare list.
+    """
+    opener = gzip.open if str(path).endswith(".gz") else open
+    with opener(path, "rt") as f:
+        payload = json.load(f)
+    if isinstance(payload, dict):
+        return payload.get("traceEvents", [])
+    return payload
+
+
+def complete_events(events: Iterable[dict]) -> List[dict]:
+    """The ``ph == "X"`` complete events, nested duplicates removed.
+
+    The profiler sometimes records the same logical range twice (an
+    outer and an inner event with the same name); duplicates whose
+    interval is contained in an already-kept same-name interval on the
+    same thread are dropped, keeping the outermost.
+    """
+    out: List[dict] = []
+    kept: Dict[Tuple[object, str], List[Tuple[float, float]]] = {}
+    evs = [e for e in events
+           if e.get("ph") == "X" and "ts" in e and "dur" in e]
+    evs.sort(key=lambda e: (float(e["ts"]), -float(e["dur"])))
+    for e in evs:
+        key = (e.get("tid"), e.get("name", ""))
+        t0, t1 = float(e["ts"]), float(e["ts"]) + float(e["dur"])
+        spans = kept.setdefault(key, [])
+        if any(a <= t0 and t1 <= b for a, b in spans):
+            continue
+        spans.append((t0, t1))
+        out.append(e)
+    return out
+
+
+def _union_us(spans: List[Tuple[float, float]]) -> float:
+    total, cur = 0.0, None
+    for a, b in sorted(spans):
+        if cur is None or a > cur[1]:
+            if cur is not None:
+                total += cur[1] - cur[0]
+            cur = [a, b]
+        else:
+            cur[1] = max(cur[1], b)
+    if cur is not None:
+        total += cur[1] - cur[0]
+    return total
+
+
+def _clip(span: Tuple[float, float],
+          windows: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    a, b = span
+    return [(max(a, w0), min(b, w1)) for w0, w1 in windows
+            if max(a, w0) < min(b, w1)]
+
+
+def hlo_scope_map(compiled_text: str) -> Dict[str, Dict[str, str]]:
+    """{hlo_module: {instruction name: device scope}} from HLO text.
+
+    ``compiled_text`` is ``jitfn.lower(...).compile().as_text()`` —
+    every instruction's ``metadata={op_name="jit(f)/.../ndpp.<x>/..."}``
+    carries the ``jax.named_scope`` path; the innermost ``ndpp.*``
+    component wins.  Instructions outside any scope map to
+    ``phases.UNATTRIBUTED``.
+    """
+    out: Dict[str, Dict[str, str]] = {}
+    module = ""
+    for line in compiled_text.splitlines():
+        m = _MODULE_RE.match(line)
+        if m:
+            module = m.group(1)
+            out.setdefault(module, {})
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, op_name = m.group(1), m.group(2)
+        scope = ph.UNATTRIBUTED
+        for part in reversed(op_name.split("/")):
+            if part.startswith(ph.SCOPE_PREFIX):
+                scope = part
+                break
+        out.setdefault(module, {})[name] = scope
+    return out
+
+
+def _base(name: str) -> str:
+    """``dot.3`` → ``dot``: trace thunk names and compiled-text
+    instruction names can disagree on the numeric suffix."""
+    head, dot, tail = name.rpartition(".")
+    return head if dot and tail.isdigit() else name
+
+
+def _scope_of(module: Optional[str], op: str,
+              scope_maps: Dict[str, Dict[str, str]]) -> str:
+    candidates = ([scope_maps[module]] if module in scope_maps
+                  else list(scope_maps.values()))
+    for table in candidates:
+        if op in table:
+            return table[op]
+    # base-name fallback, only when unambiguous across the module
+    hits = set()
+    for table in candidates:
+        for name, scope in table.items():
+            if _base(name) == _base(op):
+                hits.add(scope)
+    return hits.pop() if len(hits) == 1 else ph.UNATTRIBUTED
+
+
+@dataclasses.dataclass
+class AttributionReport:
+    """Parsed per-phase breakdown of one captured engine run."""
+
+    n_ticks: int
+    rounds: int
+    wall_us: float                      # Σ tick-span wall time
+    device_busy_us: float               # union of executable spans in ticks
+    host_gap_us: float                  # wall − busy: device idle in-tick
+    host_gap_frac: float
+    phases: Dict[str, dict]             # host phase → {count, wall_us}
+    device: Dict[str, dict]             # device scope → {ops, busy_us}
+    dispatches: Dict[str, int]          # jitted fn → launches
+    dispatches_total: int
+    dispatches_per_tick: float
+    dispatches_per_round: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format_table(self) -> str:
+        lines = [
+            f"ticks={self.n_ticks} rounds={self.rounds} "
+            f"wall={self.wall_us:.0f}us device_busy="
+            f"{self.device_busy_us:.0f}us "
+            f"host_gap={self.host_gap_us:.0f}us "
+            f"({self.host_gap_frac:.1%})",
+            f"dispatches/tick={self.dispatches_per_tick:.2f} "
+            f"dispatches/round={self.dispatches_per_round:.2f} "
+            f"({self.dispatches_total} total)",
+        ]
+        for name, rec in sorted(self.phases.items()):
+            lines.append(f"  host  {name:16s} x{rec['count']:<4d} "
+                         f"{rec['wall_us']:10.1f}us")
+        for name, rec in sorted(self.device.items()):
+            lines.append(f"  dev   {name:16s} x{rec['ops']:<4d} "
+                         f"{rec['busy_us']:10.1f}us")
+        for name, n in sorted(self.dispatches.items()):
+            lines.append(f"  disp  {name:16s} x{n}")
+        return "\n".join(lines)
+
+
+def attribute(events: Iterable[dict],
+              scope_maps: Optional[Dict[str, Dict[str, str]]] = None,
+              ) -> AttributionReport:
+    """Fold raw trace events into an :class:`AttributionReport`.
+
+    ``scope_maps`` (from :func:`hlo_scope_map`) enables device-scope
+    attribution of HLO-op events; without it every device op lands in
+    the ``unattributed`` bucket — parsing degrades, never fails.
+    """
+    evs = complete_events(events)
+    tick_spans: List[Tuple[float, float]] = []
+    phase_acc: Dict[str, dict] = {}
+    device_acc: Dict[str, dict] = {}
+    dispatches: Dict[str, int] = {}
+    exec_spans: List[Tuple[float, float]] = []
+    rounds = 0
+
+    for e in evs:
+        name = e.get("name", "")
+        t0 = float(e["ts"])
+        t1 = t0 + float(e["dur"])
+        if name.startswith(TICK_PREFIX):
+            tick_spans.append((t0, t1))
+            continue
+        if name.startswith(PHASE_PREFIX):
+            pname = name[len(PHASE_PREFIX):]
+            rec = phase_acc.setdefault(pname, {"count": 0, "wall_us": 0.0})
+            rec["count"] += 1
+            rec["wall_us"] += t1 - t0
+            if pname == ph.ROUND_DISPATCH:
+                rounds += 1
+            continue
+        m = _PJIT_RE.match(name)
+        if m:
+            fn = m.group(1)
+            dispatches[fn] = dispatches.get(fn, 0) + 1
+            continue
+        if name in EXEC_MARKERS:
+            exec_spans.append((t0, t1))
+            continue
+        args = e.get("args") or {}
+        if "hlo_op" in args:
+            scope = (ph.UNATTRIBUTED if scope_maps is None else
+                     _scope_of(args.get("hlo_module"), args["hlo_op"],
+                               scope_maps))
+            rec = device_acc.setdefault(scope, {"ops": 0, "busy_us": 0.0})
+            rec["ops"] += 1
+            rec["busy_us"] += t1 - t0
+
+    wall = _union_us(tick_spans)
+    if tick_spans:
+        clipped: List[Tuple[float, float]] = []
+        for span in exec_spans:
+            clipped.extend(_clip(span, tick_spans))
+        busy = _union_us(clipped)
+    else:
+        busy = _union_us(exec_spans)
+    gap = max(0.0, wall - busy)
+    n_ticks = len(tick_spans)
+    total = sum(dispatches.values())
+    return AttributionReport(
+        n_ticks=n_ticks,
+        rounds=rounds or n_ticks,
+        wall_us=wall,
+        device_busy_us=busy,
+        host_gap_us=gap,
+        host_gap_frac=(gap / wall) if wall else 0.0,
+        phases=phase_acc,
+        device=device_acc,
+        dispatches=dispatches,
+        dispatches_total=total,
+        dispatches_per_tick=total / n_ticks if n_ticks else float(total),
+        dispatches_per_round=(total / (rounds or n_ticks)
+                              if (rounds or n_ticks) else float(total)),
+    )

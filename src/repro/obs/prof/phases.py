@@ -1,0 +1,73 @@
+"""The engine phase catalog — the shared vocabulary of the observatory.
+
+Two kinds of scopes, with different mechanics and different costs:
+
+**Host phases** (``HOST_PHASES``) are ``TraceAnnotation`` ranges opened
+by host code around sections of an engine tick.  They exist only under
+``NDPP_PROFILE=1`` (``repro.obs.trace.phase_annotation``) and appear in
+captured traces as ``ndpp_phase/<name>`` events:
+
+  ``admission``       queue → slot assignment, host-side key builds
+  ``round_dispatch``  handing one speculative round (or MCMC chain
+                      advance) to the device: the jitted call(s) and the
+                      async dispatch work they trigger
+  ``harvest``         the designed once-per-tick ``jax.device_get`` that
+                      brings round outputs to host — the ONLY phase in
+                      which blocking on the device is sanctioned
+                      (ndpplint NDPP701)
+
+**Device scopes** (``DEVICE_SCOPES``) are ``jax.named_scope`` regions
+*inside* the jitted hot paths.  They are always on: a named scope is
+compile-time HLO metadata (``op_name="…/ndpp.tree_descent/…"``) with
+zero runtime cost, so the bare engine keeps bit-identical draws and an
+unchanged compiled program.  The trace parser joins captured HLO-op
+events against compiled-module metadata to attribute device busy time
+per scope:
+
+  ``ndpp.proposal``      tree-based proposal draw (coins + traversal)
+  ``ndpp.tree_descent``  root→block descent levels of the traversal
+  ``ndpp.leaf_scoring``  batched bilinear leaf-block scoring + pick
+  ``ndpp.logdet_ratio``  2K-space log det(L_Y) − log det(L̂_Y)
+  ``ndpp.accept``        acceptance coin flips
+  ``ndpp.mcmc_step``     vmapped MH chain advance
+"""
+from __future__ import annotations
+
+# host phases ---------------------------------------------------------------
+ADMISSION = "admission"
+ROUND_DISPATCH = "round_dispatch"
+HARVEST = "harvest"
+
+HOST_PHASES = {
+    ADMISSION: "queue drain into free slots (host-only key builds)",
+    ROUND_DISPATCH: "jitted round/chain dispatch for the whole pool",
+    HARVEST: "the designed once-per-tick device_get sync",
+}
+
+#: host phases inside which a blocking device read is sanctioned —
+#: everywhere else, ``device_get``/``block_until_ready`` in a phase
+#: scope is a profiling bug that charges device wait to the wrong
+#: phase (ndpplint NDPP701)
+BLOCKING_ALLOWED = frozenset({HARVEST})
+
+# device scopes -------------------------------------------------------------
+SCOPE_PREFIX = "ndpp."
+
+PROPOSAL = SCOPE_PREFIX + "proposal"
+TREE_DESCENT = SCOPE_PREFIX + "tree_descent"
+LEAF_SCORING = SCOPE_PREFIX + "leaf_scoring"
+LOGDET_RATIO = SCOPE_PREFIX + "logdet_ratio"
+ACCEPT = SCOPE_PREFIX + "accept"
+MCMC_STEP = SCOPE_PREFIX + "mcmc_step"
+
+DEVICE_SCOPES = {
+    PROPOSAL: "proposal DPP draw (eigenvector coins + tree sampling)",
+    TREE_DESCENT: "root-to-block tree traversal levels",
+    LEAF_SCORING: "batched bilinear leaf-block scoring",
+    LOGDET_RATIO: "2K-space log-det acceptance ratio",
+    ACCEPT: "acceptance coin flips",
+    MCMC_STEP: "vmapped Metropolis-Hastings chain advance",
+}
+
+#: bucket for device ops that fall under no ``ndpp.*`` named scope
+UNATTRIBUTED = "unattributed"

@@ -1,0 +1,115 @@
+"""Schema validation for committed BENCH_*.json artifacts.
+
+The bench files are the repo's performance trajectory — every perf PR
+appends or refreshes rows, and ``tools/benchdiff`` gates regressions by
+diffing them.  That only works if the artifacts stay machine-readable,
+so this validator pins the envelope:
+
+  * top level: ``{"meta": {...}, "modes": {mode: [row, ...]}}``;
+  * ``meta``: ``bench``/``backend``/``jax`` strings + ``unix_time``
+    number; ``git_commit``/``git_dirty`` provenance (warning-only for
+    files written before the provenance stamp existed);
+  * rows: non-empty flat-ish dicts of JSON scalars (nested dicts such
+    as histogram snapshots allowed), every number finite — NaN/inf are
+    not JSON and would corrupt the trajectory silently.
+
+Violations split into hard ``errors`` (shape/finiteness — CI fails)
+and ``warnings`` (missing provenance on legacy files — CI reports).
+Run via ``tools/benchdiff --validate`` or import directly.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import List, Tuple
+
+META_REQUIRED = {"bench": str, "backend": str, "jax": str,
+                 "unix_time": (int, float)}
+META_PROVENANCE = ("git_commit", "git_dirty")
+
+
+def _check_number(v, where: str, errors: List[str]) -> None:
+    if isinstance(v, bool):
+        return
+    if isinstance(v, float) and not math.isfinite(v):
+        errors.append(f"{where}: non-finite number {v!r}")
+
+
+def _check_value(v, where: str, errors: List[str], depth: int = 0) -> None:
+    if depth > 4:
+        errors.append(f"{where}: nesting deeper than 4 levels")
+        return
+    if v is None or isinstance(v, (str, bool)):
+        return
+    if isinstance(v, (int, float)):
+        _check_number(v, where, errors)
+        return
+    if isinstance(v, dict):
+        for k, sub in v.items():
+            if not isinstance(k, str):
+                errors.append(f"{where}: non-string key {k!r}")
+            _check_value(sub, f"{where}.{k}", errors, depth + 1)
+        return
+    if isinstance(v, list):
+        for i, sub in enumerate(v):
+            _check_value(sub, f"{where}[{i}]", errors, depth + 1)
+        return
+    errors.append(f"{where}: non-JSON value of type {type(v).__name__}")
+
+
+def validate(payload, label: str = "BENCH") -> Tuple[List[str], List[str]]:
+    """Validate one parsed BENCH payload → ``(errors, warnings)``."""
+    errors: List[str] = []
+    warnings: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"{label}: top level must be an object, "
+                f"got {type(payload).__name__}"], warnings
+
+    meta = payload.get("meta")
+    if not isinstance(meta, dict):
+        errors.append(f"{label}: missing or non-object 'meta'")
+    else:
+        for key, typ in META_REQUIRED.items():
+            if key not in meta:
+                errors.append(f"{label}.meta: missing required key {key!r}")
+            elif not isinstance(meta[key], typ):
+                errors.append(f"{label}.meta.{key}: expected "
+                              f"{typ if isinstance(typ, type) else 'number'},"
+                              f" got {type(meta[key]).__name__}")
+        missing = [k for k in META_PROVENANCE if k not in meta]
+        if missing:
+            warnings.append(
+                f"{label}.meta: no git provenance ({', '.join(missing)}) — "
+                f"written before the provenance stamp; refresh to label "
+                f"trajectory points")
+
+    modes = payload.get("modes")
+    if not isinstance(modes, dict):
+        errors.append(f"{label}: missing or non-object 'modes'")
+        return errors, warnings
+    if not modes:
+        warnings.append(f"{label}.modes: empty — nothing to gate")
+    for mode, rows in modes.items():
+        where = f"{label}.modes.{mode}"
+        if not isinstance(rows, list):
+            errors.append(f"{where}: expected a list of rows")
+            continue
+        if not rows:
+            warnings.append(f"{where}: empty row list")
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict) or not row:
+                errors.append(f"{where}[{i}]: rows must be non-empty "
+                              f"objects")
+                continue
+            _check_value(row, f"{where}[{i}]", errors)
+    return errors, warnings
+
+
+def validate_file(path: str) -> Tuple[List[str], List[str]]:
+    """Load and validate a BENCH file → ``(errors, warnings)``."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"], []
+    return validate(payload, label=path)

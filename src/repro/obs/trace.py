@@ -1,11 +1,18 @@
 """jax.profiler trace-context hooks, gated by an env flag.
 
-``NDPP_PROFILE=1`` makes the engine wrap every tick dispatch in a
-``jax.profiler.TraceAnnotation`` so tick boundaries (and the backend
-that ran them) show up as named ranges in ``jax.profiler.trace`` /
-TensorBoard captures.  With the flag unset (the default, and the only
-mode CI exercises for timing) the context manager is a no-op object
-created once — zero per-tick overhead, zero profiler imports.
+``NDPP_PROFILE=1`` makes the engine wrap every tick dispatch — and,
+since the performance observatory (``repro.obs.prof``), every named
+*phase* inside a tick — in a ``jax.profiler.TraceAnnotation`` so tick
+and phase boundaries show up as named ranges in ``jax.profiler.trace``
+/ TensorBoard captures and in the parsed attribution reports.  With the
+flag unset (the default, and the only mode CI exercises for timing) the
+context managers are one shared no-op object — zero per-tick overhead,
+zero profiler imports.
+
+This module is the ONE place the repo constructs
+``jax.profiler.TraceAnnotation`` (enforced by ndpplint NDPP702): every
+annotation goes through the same enable gate, so a stray always-on
+annotation can never leak profiler overhead into production ticks.
 """
 from __future__ import annotations
 
@@ -13,6 +20,10 @@ import contextlib
 import os
 
 PROFILE_ENV = "NDPP_PROFILE"
+
+#: prefix under which engine phase scopes appear in captured traces —
+#: ``repro.obs.prof.parse`` keys its phase attribution off this
+PHASE_PREFIX = "ndpp_phase/"
 
 
 def profiling_enabled() -> bool:
@@ -30,15 +41,32 @@ class _NullContext(contextlib.AbstractContextManager):
 _NULL = _NullContext()
 
 
-def tick_annotation(name: str, enabled: bool):
-    """A context manager naming one tick dispatch for the profiler.
+def annotation(name: str, enabled: bool):
+    """The gated ``TraceAnnotation`` constructor (see module doc).
 
-    ``enabled`` is resolved once at engine construction (from
-    ``profiling_enabled()``), not per tick — the disabled path returns a
-    shared no-op context and never imports the profiler.
+    ``enabled`` is resolved once by the caller (from
+    ``profiling_enabled()`` at construction time), not per call — the
+    disabled path returns a shared no-op context and never imports the
+    profiler.
     """
     if not enabled:
         return _NULL
     from jax.profiler import TraceAnnotation
 
     return TraceAnnotation(name)
+
+
+def tick_annotation(name: str, enabled: bool):
+    """A context manager naming one tick dispatch for the profiler."""
+    return annotation(name, enabled)
+
+
+def phase_annotation(name: str, enabled: bool):
+    """A context manager naming one engine *phase* (``ndpp_phase/<name>``).
+
+    Phase names come from the catalog in ``repro.obs.prof.phases``; the
+    trace parser groups host time by this prefix.
+    """
+    if not enabled:
+        return _NULL
+    return annotation(PHASE_PREFIX + name, True)

@@ -38,6 +38,7 @@ changes float drift, never the chain's exact-arithmetic trajectory.)
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import warnings
 from typing import Dict, List, Optional, Union
@@ -64,7 +65,12 @@ from repro.core.rejection import (
 from repro.core.tree import shard_spectral
 from repro.core.types import SpectralNDPP
 from repro.obs import Span, Telemetry, engine_instruments
+from repro.obs.prof import NULL_ACCOUNTANT, Accountant
+from repro.obs.prof import phases as prof_phases
 from repro.serve.catalog import Catalog, CatalogState, as_state
+
+#: shared no-op context for the uninstrumented engine's phase scopes
+_NULL_PHASE = contextlib.nullcontext()
 
 
 class TickBudgetExhausted(RuntimeError):
@@ -288,8 +294,14 @@ class SamplerEngine:
         self.ticks = 0
         self._tel = telemetry
         self._spans: Dict[int, Span] = {}
+        # every jitted call / put / designed device_get goes through the
+        # accountant, so dispatch and transfer counts are exact at the
+        # call boundary (repro.obs.prof.accounting); the bare engine gets
+        # the straight-through null twin
+        self._acct = NULL_ACCOUNTANT
         if telemetry is not None:
             self._m = engine_instruments(telemetry.registry)
+            self._acct = Accountant(backend, instruments=self._m)
             # compile visibility: poll the process-wide CompileCounter
             # after each tick so unexpected recompiles show up as a
             # counter bump + flight event instead of silent latency
@@ -383,6 +395,11 @@ class SamplerEngine:
             # E[#trials] — a swap can move the rate by an order of magnitude
             self.n_spec = auto_n_spec_dynamic(st.proposal, st.sp)
 
+    def _phase(self, name: str):
+        """Profiler scope for one engine phase (no-op without telemetry
+        or with ``NDPP_PROFILE`` unset)."""
+        return self._tel.phase(name) if self._tel is not None else _NULL_PHASE
+
     def _init_chain_state(self, seed: int) -> mcmc_core.MCMCState:
         """Deterministic per-request chain start (schedule-independent):
         empty for the up/down chain, stochastic-greedy size-k for the swap
@@ -475,34 +492,42 @@ class SamplerEngine:
         vmapped call (vacant slots carry dummy chains so shapes never
         change); a slot retires with the chain state at exactly step
         ``burn_in + thin``, read out of the per-step trace."""
-        self._admit()
+        with self._phase(prof_phases.ADMISSION):
+            self._admit()
         if all(r is None for r in self.slot_req):
             return False
         self.ticks += 1
         n_steps = self.mcmc_steps_per_tick
-        if self.mesh is None:
-            states, items_tr, mask_tr, acc_tr = mcmc_core.run_chains(
-                self.sp, jnp.asarray(self.slot_key), self._states,
-                n_steps=n_steps, fixed=self.mcmc_k is not None,
-                p_swap=self.mcmc_p_swap,
-                refresh_every=self.mcmc_refresh_every)
-        else:
-            states, items_tr, mask_tr, acc_tr = mcmc_core.run_chains_sharded(
-                self.sp, jnp.asarray(self.slot_key), self._states,
-                mesh=self.mesh, n_steps=n_steps,
-                fixed=self.mcmc_k is not None, p_swap=self.mcmc_p_swap,
-                refresh_every=self.mcmc_refresh_every)
+        with self._phase(prof_phases.ROUND_DISPATCH):
+            key_dev = self._acct.put("slot_key", self.slot_key)
+            if self.mesh is None:
+                states, items_tr, mask_tr, acc_tr = self._acct.call(
+                    "run_chains", mcmc_core.run_chains,
+                    self.sp, key_dev, self._states,
+                    n_steps=n_steps, fixed=self.mcmc_k is not None,
+                    p_swap=self.mcmc_p_swap,
+                    refresh_every=self.mcmc_refresh_every)
+            else:
+                states, items_tr, mask_tr, acc_tr = self._acct.call(
+                    "run_chains_sharded", mcmc_core.run_chains_sharded,
+                    self.sp, key_dev, self._states,
+                    mesh=self.mesh, n_steps=n_steps,
+                    fixed=self.mcmc_k is not None, p_swap=self.mcmc_p_swap,
+                    refresh_every=self.mcmc_refresh_every)
         self._states = states
-        # the designed once-per-tick device→host sync; explicit so strict
-        # transfer-guard runs see it as intentional.  Telemetry piggybacks
-        # the acceptance trace onto the same call — it is already an
-        # output of the jitted chain step, so this widens the existing
-        # sync, never adds one (and never changes the compiled program).
-        if self._tel is None:
-            items_h, mask_h = jax.device_get((items_tr, mask_tr))  # (S, n_steps, R)
-        else:
-            items_h, mask_h, acc_h = jax.device_get(
-                (items_tr, mask_tr, acc_tr))
+        # the designed once-per-tick device→host sync (routed through the
+        # accountant; explicit so strict transfer-guard runs see it as
+        # intentional).  Telemetry piggybacks the acceptance trace onto
+        # the same call — it is already an output of the jitted chain
+        # step, so this widens the existing sync, never adds one (and
+        # never changes the compiled program).
+        with self._phase(prof_phases.HARVEST):
+            if self._tel is None:
+                items_h, mask_h = self._acct.device_get(
+                    (items_tr, mask_tr))  # (S, n_steps, R)
+            else:
+                items_h, mask_h, acc_h = self._acct.device_get(
+                    (items_tr, mask_tr, acc_tr))
         occupied = [s for s in range(self.n_slots)
                     if self.slot_req[s] is not None]
         if self._tel is not None:
@@ -538,19 +563,18 @@ class SamplerEngine:
         request's proposals and acceptance tests always come from the
         arrays it was admitted under.
         """
-        self._admit()
+        with self._phase(prof_phases.ADMISSION):
+            self._admit()
         if all(r is None for r in self.slot_req):
             return False
         self.ticks += 1
+        keys = None
         # operands cross the jit boundary as host numpy arrays: op-by-op
-        # jnp conversions here would dispatch (and, under
-        # jax_check_tracer_leaks, recompile) tiny convert/iota kernels on
-        # every tick
-        keys = _fanout_keys(
-            self.slot_key,
-            np.asarray(self.slot_trials, np.uint32),
-            np.arange(self.n_spec, dtype=np.uint32),
-        )
+        # jnp conversions would dispatch (and, under
+        # jax_check_tracer_leaks, recompile) tiny convert/iota kernels
+        # on every tick
+        trials_host = np.asarray(self.slot_trials, np.uint32)
+        spec_ids = np.arange(self.n_spec, dtype=np.uint32)
         if self._cat is None:
             slot_groups = [(None, [s for s in range(self.n_slots)
                                    if self.slot_req[s] is not None])]
@@ -565,25 +589,42 @@ class SamplerEngine:
                 ((self.slot_pin[ss[0]], ss) for ss in by_pin.values()),
                 key=lambda g: g[0].version)
         for pin, slots in slot_groups:
-            if pin is None:
-                items, mask, accept = (
-                    _spec_round(self.sampler, keys) if self.mesh is None
-                    else _spec_round_sharded(self.sampler, keys, self.mesh))
-            else:
-                items, mask, accept = (
-                    _spec_round_dual(pin.proposal, pin.sp, keys)
-                    if self.mesh is None
-                    else _spec_round_dual_sharded(pin.proposal, pin.sp,
-                                                  keys, self.mesh))
+            # exactly one round_dispatch phase span per speculative round;
+            # the pool-wide key fan-out rides in the first round's span
+            with self._phase(prof_phases.ROUND_DISPATCH):
+                if keys is None:
+                    keys = self._acct.call(
+                        "_fanout_keys", _fanout_keys,
+                        self.slot_key, trials_host, spec_ids)
+                if pin is None:
+                    items, mask, accept = (
+                        self._acct.call("_spec_round", _spec_round,
+                                        self.sampler, keys)
+                        if self.mesh is None
+                        else self._acct.call(
+                            "_spec_round_sharded", _spec_round_sharded,
+                            self.sampler, keys, self.mesh))
+                else:
+                    items, mask, accept = (
+                        self._acct.call("_spec_round_dual", _spec_round_dual,
+                                        pin.proposal, pin.sp, keys)
+                        if self.mesh is None
+                        else self._acct.call(
+                            "_spec_round_dual_sharded",
+                            _spec_round_dual_sharded,
+                            pin.proposal, pin.sp, keys, self.mesh))
             self._harvest(slots, items, mask, accept)
         return True
 
     def _harvest(self, slots: List[int], items, mask, accept):
         """Retire-or-advance the given slots from one round's outputs."""
         r = items.shape[-1]
-        # the designed once-per-tick device→host sync; explicit so strict
-        # transfer-guard runs see it as intentional
-        items_h, mask_h, acc = jax.device_get((items, mask, accept))
+        # the designed once-per-tick device→host sync (routed through the
+        # accountant); explicit so strict transfer-guard runs see it as
+        # intentional
+        with self._phase(prof_phases.HARVEST):
+            items_h, mask_h, acc = self._acct.device_get(
+                (items, mask, accept))
         acc = acc.reshape(self.n_slots, self.n_spec)
         items_h = items_h.reshape(self.n_slots, self.n_spec, r)
         mask_h = mask_h.reshape(self.n_slots, self.n_spec, r)
@@ -692,4 +733,5 @@ class SamplerEngine:
             out["metrics"] = self._tel.registry.snapshot()
             out["flight_events"] = len(self._tel.flight)
             out["flight_dropped"] = self._tel.flight.dropped
+            out["accounting"] = self._acct.totals()
         return out

@@ -1,0 +1,28 @@
+"""Fixture: NDPP701 — a blocking device read inside a non-harvest phase
+scope charges device wait to the wrong phase.  The engine's contract is
+exactly one sanctioned sync point per tick: the harvest device_get."""
+import jax
+
+from repro.obs.prof import phases as prof_phases
+
+
+def tick(phase, round_fn, state):
+    with phase("admission"):
+        out = round_fn(state)
+        out.block_until_ready()  # EXPECT: NDPP701
+    with phase("round_dispatch"):
+        out = round_fn(state)
+        host = jax.device_get(out)  # EXPECT: NDPP701
+    return host
+
+
+class Engine:
+    def _phase(self, name):
+        raise NotImplementedError
+
+    def step(self, acct, round_fn, state):
+        with self._phase(prof_phases.ROUND_DISPATCH):
+            out = round_fn(state)
+            if out is not None:
+                got = acct.device_get(out)  # EXPECT: NDPP701
+        return got

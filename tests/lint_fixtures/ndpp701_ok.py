@@ -1,0 +1,33 @@
+"""Clean twin for NDPP701 — blocking reads only inside the sanctioned
+harvest phase (both spellings: the string literal and the catalog
+constant), or outside any phase scope entirely."""
+import jax
+
+from repro.obs.prof import phases as prof_phases
+
+
+def tick(phase, round_fn, state):
+    with phase("round_dispatch"):
+        out = round_fn(state)
+    with phase("harvest"):
+        host = jax.device_get(out)
+    return host
+
+
+class Engine:
+    def _phase(self, name):
+        raise NotImplementedError
+
+    def step(self, acct, round_fn, state):
+        with self._phase(prof_phases.ROUND_DISPATCH):
+            out = round_fn(state)
+        with self._phase(prof_phases.HARVEST):
+            got = acct.device_get(out)
+        return got
+
+
+def unscoped_sync(out):
+    # a blocking read outside any phase scope is the bare engine's
+    # normal sync — NDPP701 only polices attribution inside scopes
+    out.block_until_ready()
+    return jax.device_get(out)

@@ -1,0 +1,13 @@
+"""Fixture: NDPP702 — TraceAnnotation constructed outside the
+repro.obs.trace gate bypasses the NDPP_PROFILE env gate and the
+ndpp_phase/ naming convention the attribution parser keys on."""
+import jax.profiler
+from jax.profiler import TraceAnnotation
+
+
+def tick(i, fn, x):
+    with jax.profiler.TraceAnnotation("my_tick"):  # EXPECT: NDPP702
+        out = fn(x)
+    ann = TraceAnnotation("ndpp_phase/harvest")  # EXPECT: NDPP702
+    with ann:
+        return out

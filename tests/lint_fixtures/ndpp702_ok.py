@@ -1,0 +1,12 @@
+"""Clean twin for NDPP702 — annotations go through the gated
+constructors in repro.obs.trace, which centralize the NDPP_PROFILE
+check and the ndpp_phase/ naming the trace parser keys on."""
+from repro.obs.trace import annotation, phase_annotation, profiling_enabled
+
+
+def tick(i, fn, x):
+    enabled = profiling_enabled()
+    with annotation(f"ndpp_engine_tick/{i}", enabled):
+        with phase_annotation("round_dispatch", enabled):
+            out = fn(x)
+    return out

@@ -137,3 +137,105 @@ def test_mcmc_tick_loop_compiles_once(sampler):
         f"steady-state MCMC ticks recompiled: {ticks}")
     # sanity: chains really advanced 20 ticks x 16 steps
     assert int(np.max(eng.slot_trials)) == N_TICKS * 16
+
+
+# ---------------------------------------------------------------- PR 9: the
+# performance observatory must be *free* at the draw level and *exact* at
+# the accounting level.  These pin today's per-tick dispatch/transfer
+# numbers for both backends — ROADMAP item 1's fused megakernel must move
+# the rejection dispatches/tick from 2 to 1, and will edit these
+# constants loudly when it does.
+
+def _drain(eng, n):
+    while len(eng.finished) < n:
+        assert eng.step(), "engine idle before draining"
+    return {rid: eng.finished[rid] for rid in sorted(eng.finished)}
+
+
+def test_profile_instrumented_draws_bit_identical(sampler):
+    """Full observatory on (phases + accounting + profile annotations):
+    draws must be bit-identical to the bare engine's — named scopes are
+    compile-time metadata and the accounting is call-boundary host code,
+    so nothing on the device side may change."""
+    from repro.obs import Telemetry
+
+    def run(telemetry):
+        eng = SamplerEngine(sampler, n_slots=4, n_spec=4,
+                            telemetry=telemetry)
+        for i in range(12):
+            eng.submit(SampleRequest(rid=i, seed=i))
+        return _drain(eng, 12)
+
+    bare = run(None)
+    inst = run(Telemetry(profile=True))
+    assert bare.keys() == inst.keys()
+    for rid in bare:
+        np.testing.assert_array_equal(bare[rid].items, inst[rid].items)
+        np.testing.assert_array_equal(bare[rid].mask, inst[rid].mask)
+        assert bare[rid].trials == inst[rid].trials
+        assert bare[rid].accepted == inst[rid].accepted
+
+
+def test_profile_instrumented_engine_compiles_once(sampler):
+    """NDPP_PROFILE-style instrumentation (profile=True) adds zero
+    compiles after warmup — annotations are host spans, named scopes are
+    already part of the compiled program."""
+    from repro.obs import Telemetry
+
+    eng = SamplerEngine(sampler, n_slots=4, n_spec=4,
+                        telemetry=Telemetry(profile=True))
+    for i in range(500):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    eng.step()                           # warmup: the one allowed compile
+    ticks = _per_tick_compiles(eng, N_TICKS - 1)
+    assert ticks == [0] * (N_TICKS - 1), (
+        f"profile-instrumented ticks recompiled: {ticks}")
+
+
+def test_rejection_per_tick_accounting_pinned(sampler):
+    """Steady-state rejection tick = exactly 2 launches (key fan-out +
+    speculative round), 64 h2d bytes (slot keys 4x8 + trials 4x4 +
+    spec ids 4x4, all uint32), 656 d2h bytes (items (4,4,8) i32 = 512 +
+    mask (4,4,8) bool = 128 + accept (4,4) bool = 16)."""
+    from repro.obs import Telemetry
+
+    tel = Telemetry()
+    eng = SamplerEngine(sampler, n_slots=4, n_spec=4, telemetry=tel)
+    for i in range(500):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    eng.step()                           # warmup tick
+    for _ in range(10):
+        with eng._acct.measure() as m:
+            assert eng.step()
+        assert m.dispatches == {"_fanout_keys": 1, "_spec_round": 1}
+        assert m.h2d_bytes == 64
+        assert m.d2h_bytes == 656
+    # the registry-level counters carry the same totals, labelled
+    reg = tel.registry
+    assert reg.get("ndpp_dispatches_total").value(
+        backend="rejection", fn="_spec_round") == 11
+    assert reg.get("ndpp_transfer_bytes_total").value(
+        backend="rejection", direction="d2h") == 11 * 656
+
+
+def test_mcmc_per_tick_accounting_pinned(sampler):
+    """Steady-state MCMC tick = exactly 1 launch (the vmapped chain
+    advance), 32 h2d bytes (slot keys 4x8 uint32), 2624 d2h bytes (the
+    per-tick thinned-sample + acceptance-trace harvest)."""
+    from repro.obs import Telemetry
+
+    tel = Telemetry()
+    eng = SamplerEngine(sampler, backend="mcmc", n_slots=4,
+                        mcmc_burn_in=512, mcmc_thin=16,
+                        mcmc_steps_per_tick=16, telemetry=tel)
+    for i in range(4):
+        eng.submit(SampleRequest(rid=i, seed=i))
+    eng.step()                           # warmup tick
+    for _ in range(10):
+        with eng._acct.measure() as m:
+            assert eng.step()
+        assert m.dispatches == {"run_chains": 1}
+        assert m.h2d_bytes == 32
+        assert m.d2h_bytes == 2624
+    assert tel.registry.get("ndpp_dispatches_total").value(
+        backend="mcmc", fn="run_chains") == 11

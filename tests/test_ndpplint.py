@@ -137,12 +137,12 @@ def test_cli_exits_zero_on_final_tree():
     assert r.returncode == 0, r.stdout + r.stderr
 
 
-def test_cli_list_rules_covers_six_families():
+def test_cli_list_rules_covers_seven_families():
     r = _cli("--list-rules")
     assert r.returncode == 0
     families = {line[:6][:5] for line in r.stdout.splitlines() if line}
     assert {"NDPP1", "NDPP2", "NDPP3", "NDPP4", "NDPP5",
-            "NDPP6"} <= families
+            "NDPP6", "NDPP7"} <= families
 
 
 def test_cli_unknown_path_is_usage_error():
