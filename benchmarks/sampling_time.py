@@ -147,9 +147,17 @@ def run(ms: List[int] = None, k: int = 32, n_samples: int = 8,
 
         from repro.core.rejection import NDPPSampler
         sampler = NDPPSampler(sp=sp, tree=tree)
-        rej = jax.jit(lambda key: rejection_sample(sampler, key, 200))
+        # single-request latency through the device-resident fused driver:
+        # the whole accept/reject loop (speculative fan-out + descent +
+        # scoring + accept test) is ONE dispatch.  The pre-fusion timer
+        # ran the per-trial while-loop sampler, paying ~E[#trials]
+        # strictly sequential descents; a modest fan-out retires the
+        # request in ~1-3 device-side rounds instead.  (Width 8 is
+        # latency-optimal on hosts where lane cost is ~linear; the wide
+        # ``auto_n_spec`` width is throughput-tuned for full pools.)
         t_rej = _time(lambda: jax.block_until_ready(
-            rej(jax.random.PRNGKey(1)).items),
+            sample_batched_many(sampler, jax.random.PRNGKey(1), 1,
+                                n_spec=8, max_trials=200).items),
             section=f"latency/rejection/M={m}")
 
         exp_trials = float(det_ratio_exact(sp))
@@ -626,8 +634,7 @@ def run_profile(ms: List[int] = None, k: int = 8, smoke: bool = False,
     from repro.serve.sampler_engine import (
         SampleRequest,
         SamplerEngine,
-        _fanout_keys,
-        _spec_round,
+        _spec_round_fused,
     )
 
     ms = ms or ([2 ** 8] if smoke else [2 ** 12])
@@ -669,14 +676,13 @@ def run_profile(ms: List[int] = None, k: int = 8, smoke: bool = False,
 
         rep = None
         if log_dir is not None:
-            # scope maps from the warm jit cache: same call signatures
+            # scope maps from the warm jit cache: same call signature
             # the engine dispatches, so lowering compiles nothing
-            fanout_args = (eng.slot_key,
-                           np.asarray(eng.slot_trials, np.uint32),
-                           np.arange(eng.n_spec, dtype=np.uint32))
             maps = prof_capture.compiled_scope_maps([
-                (_fanout_keys, fanout_args),
-                (_spec_round, (eng.sampler, _fanout_keys(*fanout_args))),
+                (_spec_round_fused,
+                 (eng.sampler, eng.slot_key,
+                  np.asarray(eng.slot_trials, np.uint32)),
+                 dict(n_spec=eng.n_spec)),
             ])
             rep = attribute(load_trace(prof_capture.trace_path(log_dir)),
                             scope_maps=maps)
@@ -1007,6 +1013,13 @@ if __name__ == "__main__":
         except (OSError, subprocess.SubprocessError):
             return {}
 
+    # capture provenance ONCE, before the first artifact write: the two
+    # writers below each modify a tracked file, so stamping at dump time
+    # made every second artifact of a run read as git_dirty even from a
+    # perfectly clean tree (tools/benchdiff --validate now hard-fails
+    # committed artifacts carrying a dirty stamp)
+    git_meta = _git_meta()
+
     def _bench_meta():
         meta = {
             "bench": "sampling_time",
@@ -1015,7 +1028,7 @@ if __name__ == "__main__":
             "unix_time": int(time.time()),
             "args": vars(args),
         }
-        meta.update(_git_meta())
+        meta.update(git_meta)
         return meta
 
     if profile_rows is not None and args.profile_out:
@@ -1066,10 +1079,10 @@ if __name__ == "__main__":
                 "committed serve row lacks SLO fields", missing)
             assert srow["slo_ok"] is True, (
                 "committed serve row violates its own SLO", srow)
-        # PR 9: committed profile rows must carry the exact accounting
-        # columns, and the rejection engine stays at 2 dispatches/tick
-        # until the fused-megakernel roadmap item deliberately moves it
-        # (that PR edits this assertion and the strict pins together)
+        # PR 9/10: committed profile rows must carry the exact accounting
+        # columns, and the fused rejection tick stays at exactly ONE
+        # dispatch (fan-out + round in one jit; _spec_round_fused) —
+        # regressing to per-round host dispatches must fail CI loudly
         try:
             with open("BENCH_profile.json") as f:
                 prof_rows = json.load(f)["modes"].get("profile", [])
@@ -1082,9 +1095,10 @@ if __name__ == "__main__":
             assert not missing, (
                 "committed profile row lacks accounting fields", missing)
             if prow["backend"] == "rejection":
-                assert prow["dispatches_per_tick"] == 2.0, (
-                    "rejection dispatches/tick moved — if this is the "
-                    "megakernel PR, update the pins deliberately", prow)
+                assert prow["dispatches_per_tick"] == 1.0, (
+                    "the fused rejection tick must stay at exactly one "
+                    "dispatch — an extra per-tick launch crept back into "
+                    "the hot path", prow)
         print("smoke: committed BENCH rows carry registry "
               "histogram/percentile fields, serve SLO columns, and "
               "profile accounting columns")

@@ -16,6 +16,10 @@ the caller's back.  Lexical hazards:
            inside a Python loop in core/serve hot paths — use explicit
            ``jax.device_get`` (visible under
            ``jax.transfer_guard("disallow")``) or keep the loop on device
+  NDPP304  a Python loop in ``core/`` dispatching a module-local jitted
+           function per iteration: each round pays a host→device launch
+           round-trip — trace the whole schedule into one jit
+           (``jax.lax.while_loop``), the ``_drive_rounds_fused`` pattern
 """
 from __future__ import annotations
 
@@ -108,3 +112,55 @@ def transfer_in_loop(mod: Module) -> Iterator[Finding]:
                 f"device→host transfer per iteration — use jax.device_get "
                 f"(explicit, transfer_guard-visible) or keep the loop on "
                 f"device (lax.while_loop)")
+
+
+# ------------------------------------------------------------------ NDPP304
+def _jitted_local_names(mod: Module) -> set:
+    """Module-level names bound to jit-wrapped callables: jit-decorated
+    function defs and ``name = jax.jit(...)`` assignments.  Only the
+    module's top-level statements count — a jit created *inside* a loop
+    body is NDPP301's jurisdiction, not a round function."""
+    names = set()
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if mod.dotted(dec) == "jax.jit" or (
+                        isinstance(dec, ast.Call)
+                        and _resolves_to_jit_call(mod, dec)):
+                    names.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if _resolves_to_jit_call(mod, node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+    return names
+
+
+@rule("NDPP304", "jit-dispatch-in-round-loop",
+      "a Python loop in core/ dispatching a jitted function per iteration "
+      "pays a host launch round-trip every round — trace the loop on "
+      "device (jax.lax.while_loop) so the schedule is one dispatch")
+def jit_dispatch_in_round_loop(mod: Module) -> Iterator[Finding]:
+    p = "/" + mod.rel.replace("\\", "/")
+    if mod.kind != "fixture" and "/core/" not in p:
+        # serve/ ticks legitimately loop over dispatch groups (distinct
+        # pinned catalog versions); only core/ samplers own round loops
+        return
+    jitted = _jitted_local_names(mod)
+    if not jitted:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not (isinstance(node.func, ast.Name) and node.func.id in jitted):
+            continue
+        if mod.in_traced(node):
+            continue  # inlined into an enclosing trace: one dispatch total
+        if loop_ancestors(mod, node):
+            yield Finding(
+                "NDPP304", mod.rel, node.lineno, node.col_offset,
+                f"jitted {node.func.id!r} dispatched inside a Python loop — "
+                f"every iteration pays a host→device launch round-trip; "
+                f"move the loop into the jit (jax.lax.while_loop, the "
+                f"_drive_rounds_fused pattern) so the whole round schedule "
+                f"is one dispatch")

@@ -46,6 +46,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .rejection import (
     RejectionSample,
+    _fanout_traced,
     _log_det_ratio_rows,
     drive_rounds,
     log_det_ratio,
@@ -157,15 +158,10 @@ def update_proposal(prop: DualProposal, idx: jax.Array, z_rows: jax.Array,
 # ------------------------------------------------------------ sampling rounds
 
 
-@jax.jit
-def _spec_round_dual(prop: DualProposal, live_sp: SpectralNDPP,
-                     keys: jax.Array):
-    """One speculative round against a (possibly stale) dual proposal: the
-    tree proposes from L̂_snap, the acceptance test rescores the *live*
-    kernel.  Key schedule identical to ``rejection._spec_round``, so a
-    request's draw is independent of which proposal version served it —
-    as long as that version's arrays are the ones passed here (the
-    engine's version pinning)."""
+def _spec_round_dual_impl(prop: DualProposal, live_sp: SpectralNDPP,
+                          keys: jax.Array):
+    """Traced body of one dual-proposal round (shared by the standalone
+    dispatch and the fused variant that folds the key fan-out in)."""
     # scope names from the repro.obs.prof.phases catalog (free HLO
     # metadata; core stays import-free of repro.obs)
     ks = jax.vmap(jax.random.split)(keys)
@@ -184,13 +180,22 @@ def _spec_round_dual(prop: DualProposal, live_sp: SpectralNDPP,
     return items, mask, accept
 
 
-@functools.partial(jax.jit, static_argnames=("mesh",))
-def _spec_round_dual_sharded(prop: DualProposal, live_sp: SpectralNDPP,
-                             keys: jax.Array, mesh: Mesh):
-    """``_spec_round_dual`` over a device mesh: tree descent, leaf scoring,
-    and the snapshot/live Z-row gathers all run on the owning shard and
-    combine by psums of exact zeros (the PR-3 invariant) — bit-identical
-    to the unsharded round."""
+@jax.jit
+def _spec_round_dual(prop: DualProposal, live_sp: SpectralNDPP,
+                     keys: jax.Array):
+    """One speculative round against a (possibly stale) dual proposal: the
+    tree proposes from L̂_snap, the acceptance test rescores the *live*
+    kernel.  Key schedule identical to ``rejection._spec_round``, so a
+    request's draw is independent of which proposal version served it —
+    as long as that version's arrays are the ones passed here (the
+    engine's version pinning)."""
+    return _spec_round_dual_impl(prop, live_sp, keys)
+
+
+def _spec_round_dual_sharded_impl(prop: DualProposal, live_sp: SpectralNDPP,
+                                  keys: jax.Array, mesh: Mesh):
+    """Traced body of ``_spec_round_dual_sharded`` (shared with the fused
+    sharded variant)."""
     from repro.models import sharding as msh
 
     s = msh.model_extent(mesh)
@@ -228,6 +233,41 @@ def _spec_round_dual_sharded(prop: DualProposal, live_sp: SpectralNDPP,
                   in_specs=(prop_specs, live_specs, P(None)),
                   out_specs=(P(None),) * 3, check_rep=False)
     return f(prop, live_sp, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _spec_round_dual_sharded(prop: DualProposal, live_sp: SpectralNDPP,
+                             keys: jax.Array, mesh: Mesh):
+    """``_spec_round_dual`` over a device mesh: tree descent, leaf scoring,
+    and the snapshot/live Z-row gathers all run on the owning shard and
+    combine by psums of exact zeros (the PR-3 invariant) — bit-identical
+    to the unsharded round."""
+    return _spec_round_dual_sharded_impl(prop, live_sp, keys, mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("n_spec",))
+def _spec_round_dual_fused(prop: DualProposal, live_sp: SpectralNDPP,
+                           slot_keys: jax.Array, trials: jax.Array, *,
+                           n_spec: int):
+    """One dual-proposal round with the key fan-out folded into the same
+    jit — the engine's single dispatch per tick for slots pinned to a
+    stale proposal snapshot.  Key schedule (``fold_in(slot_keys[i],
+    trials[i] + t)``) and every downstream op match the two-dispatch
+    ``_fanout_keys`` + ``_spec_round_dual`` path bit for bit."""
+    offsets = jnp.arange(n_spec, dtype=jnp.uint32)
+    keys = _fanout_traced(slot_keys, trials, offsets)
+    return _spec_round_dual_impl(prop, live_sp, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "n_spec"))
+def _spec_round_dual_fused_sharded(prop: DualProposal, live_sp: SpectralNDPP,
+                                   slot_keys: jax.Array, trials: jax.Array,
+                                   mesh: Mesh, *, n_spec: int):
+    """``_spec_round_dual_fused`` over a device mesh (fan-out traced on
+    the replicated keys, then the one shard_map round)."""
+    offsets = jnp.arange(n_spec, dtype=jnp.uint32)
+    keys = _fanout_traced(slot_keys, trials, offsets)
+    return _spec_round_dual_sharded_impl(prop, live_sp, keys, mesh)
 
 
 # ------------------------------------------------------------------- drivers

@@ -219,11 +219,13 @@ def log_det_ratio_batch(
     return jax.vmap(lambda i, m: log_det_ratio(sp, i, m))(items, mask)
 
 
-@jax.jit
-def _spec_round(sampler: NDPPSampler, keys: jax.Array):
-    """One speculative round: draw one proposal per key (batched tree
-    traversal), score all of them with one batched log-det ratio, and flip
-    each acceptance coin.  Returns (items, mask, accept), leading dim N."""
+def _spec_round_impl(sampler: NDPPSampler, keys: jax.Array):
+    """Traced body of one speculative round: draw one proposal per key
+    (batched tree traversal), score all of them with one batched log-det
+    ratio, and flip each acceptance coin.  Returns (items, mask, accept),
+    leading dim N.  Shared by ``_spec_round`` (standalone dispatch),
+    ``_spec_round_fused`` (fan-out folded into the same jit), and the
+    device-resident round loop of ``_drive_rounds_fused``."""
     # scope names from the repro.obs.prof.phases catalog (free HLO
     # metadata; core stays import-free of repro.obs)
     ks = jax.vmap(jax.random.split)(keys)
@@ -238,6 +240,12 @@ def _spec_round(sampler: NDPPSampler, keys: jax.Array):
     return items, mask, accept
 
 
+@jax.jit
+def _spec_round(sampler: NDPPSampler, keys: jax.Array):
+    """One speculative round as its own dispatch (see ``_spec_round_impl``)."""
+    return _spec_round_impl(sampler, keys)
+
+
 def shard_sampler(sampler: NDPPSampler, mesh: Mesh) -> NDPPSampler:
     """Place a preprocessed sampler on a device mesh: tree deep levels, W,
     and the Z rows are item-sharded over the mesh "model" axis (shallow
@@ -248,13 +256,10 @@ def shard_sampler(sampler: NDPPSampler, mesh: Mesh) -> NDPPSampler:
                        tree=shard_tree(sampler.tree, mesh))
 
 
-@functools.partial(jax.jit, static_argnames=("mesh",))
-def _spec_round_sharded(sampler: NDPPSampler, keys: jax.Array, mesh: Mesh):
-    """``_spec_round`` over a device mesh: one shard_map in which the tree
-    descent, leaf scoring, and the Z-row gathers for the log-det ratio all
-    happen on the shard owning the items, combined by psums of exact zeros.
-    Only the (N, R)-shaped proposal subsets and (N,) scores cross shards —
-    never an (M, ...)-shaped array.  Bit-identical to ``_spec_round``."""
+def _spec_round_sharded_impl(sampler: NDPPSampler, keys: jax.Array,
+                             mesh: Mesh):
+    """Traced body of ``_spec_round_sharded`` (shared with the fused
+    sharded round, which folds the key fan-out into the same jit)."""
     from repro.models import sharding as msh
 
     s = msh.model_extent(mesh)
@@ -288,15 +293,63 @@ def _spec_round_sharded(sampler: NDPPSampler, keys: jax.Array, mesh: Mesh):
     return f(sampler, keys)
 
 
-@jax.jit
-def _fanout_keys(req_keys: jax.Array, starts: jax.Array, offsets: jax.Array):
-    """Per-proposal keys: key of proposal t for request i is
-    fold_in(req_keys[i], starts[i] + t).  Returns (P * S, 2)."""
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _spec_round_sharded(sampler: NDPPSampler, keys: jax.Array, mesh: Mesh):
+    """``_spec_round`` over a device mesh: one shard_map in which the tree
+    descent, leaf scoring, and the Z-row gathers for the log-det ratio all
+    happen on the shard owning the items, combined by psums of exact zeros.
+    Only the (N, R)-shaped proposal subsets and (N,) scores cross shards —
+    never an (M, ...)-shaped array.  Bit-identical to ``_spec_round``."""
+    return _spec_round_sharded_impl(sampler, keys, mesh)
+
+
+def _fanout_traced(req_keys: jax.Array, starts: jax.Array,
+                   offsets: jax.Array) -> jax.Array:
+    """Traced key fan-out: key of proposal t for request i is
+    fold_in(req_keys[i], starts[i] + t).  Returns (P * S, 2).  fold_in is
+    integer arithmetic, so the keys are bit-identical whether this runs as
+    its own dispatch (``_fanout_keys``) or inside a fused round jit."""
 
     def per_req(k, s):
         return jax.vmap(lambda o: jax.random.fold_in(k, s + o))(offsets)
 
     return jax.vmap(per_req)(req_keys, starts).reshape(-1, req_keys.shape[-1])
+
+
+@jax.jit
+def _fanout_keys(req_keys: jax.Array, starts: jax.Array, offsets: jax.Array):
+    """Standalone-dispatch form of ``_fanout_traced`` (the pre-fusion hot
+    path; kept for the observer-instrumented Python driver)."""
+    return _fanout_traced(req_keys, starts, offsets)
+
+
+@functools.partial(jax.jit, static_argnames=("n_spec",))
+def _spec_round_fused(sampler: NDPPSampler, slot_keys: jax.Array,
+                      trials: jax.Array, *, n_spec: int):
+    """One speculative round with the key fan-out folded into the same jit:
+    the engine tick's single dispatch.
+
+    ``slot_keys`` (n, 2) are per-request base keys, ``trials`` (n,) uint32
+    the per-request proposal counts already spent; proposal t of request i
+    is keyed ``fold_in(slot_keys[i], trials[i] + t)`` exactly as in the
+    two-dispatch ``_fanout_keys`` + ``_spec_round`` path, so draws are
+    bit-identical — the offsets ``arange(n_spec)`` become a traced constant
+    instead of a per-tick h2d transfer.  Returns (items, mask, accept) with
+    leading dim n * n_spec."""
+    offsets = jnp.arange(n_spec, dtype=jnp.uint32)
+    keys = _fanout_traced(slot_keys, trials, offsets)
+    return _spec_round_impl(sampler, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "n_spec"))
+def _spec_round_fused_sharded(sampler: NDPPSampler, slot_keys: jax.Array,
+                              trials: jax.Array, mesh: Mesh, *, n_spec: int):
+    """``_spec_round_fused`` over a device mesh: fan-out traced on the
+    replicated keys, then the one shard_map round.  Bit-identical to the
+    two-dispatch sharded path."""
+    offsets = jnp.arange(n_spec, dtype=jnp.uint32)
+    keys = _fanout_traced(slot_keys, trials, offsets)
+    return _spec_round_sharded_impl(sampler, keys, mesh)
 
 
 def auto_n_spec(sampler: NDPPSampler, max_spec: int = 64) -> int:
@@ -370,12 +423,87 @@ def sample_batched_many(
     else:
         req_keys = jnp.asarray(key)
         n = req_keys.shape[0]
+    if mesh is None and observer is None:
+        # the device-resident hot path: the whole accept/reject loop is one
+        # dispatch (lax.while_loop over rounds) with no per-round host sync
+        return _drive_rounds_fused(sampler, jnp.asarray(req_keys),
+                                   n_spec=n_spec, max_trials=max_trials)
     round_fn = (
         (lambda keys: _spec_round(sampler, keys)) if mesh is None
         else (lambda keys: _spec_round_sharded(sampler, keys, mesh)))
     return drive_rounds(round_fn, req_keys, sampler.tree.R, n_spec=n_spec,
                         max_trials=max_trials, grow=grow, max_spec=max_spec,
                         observer=observer)
+
+
+@functools.partial(jax.jit, static_argnames=("n_spec", "max_trials"))
+def _drive_rounds_fused(
+    sampler: NDPPSampler, req_keys: jax.Array, *, n_spec: int,
+    max_trials: int,
+) -> RejectionSample:
+    """The whole speculative accept/reject loop inside one jit.
+
+    A ``lax.while_loop`` over constant-width rounds of ``n_spec`` proposals
+    per still-pending request: round r covers proposal offsets
+    ``[r*n_spec, (r+1)*n_spec)``, keyed ``fold_in(req_keys[i], offset)``
+    with the budget truncation traced (lanes past ``max_trials`` are masked,
+    never reshaped).  Because proposal t of request i is *always* keyed by
+    its position t — never by a split chain or the round layout — the
+    draws, trial counts, and accept flags are bit-identical to the Python
+    ``drive_rounds`` driver under any batching schedule; the host loop's
+    doubling schedule only ever amortized per-round dispatch overhead,
+    which a traced loop does not pay, so the fused driver keeps the width
+    constant.  Retired requests ride along as masked lanes (shapes are
+    loop-invariant); exhausted requests return their last in-budget
+    proposal with ``accepted=False`` and ``trials=max_trials``, exactly as
+    the host driver does.
+    """
+    n = req_keys.shape[0]
+    r = sampler.tree.R
+    offsets = jnp.arange(n_spec, dtype=jnp.uint32)
+    lane = jnp.arange(n_spec, dtype=jnp.int32)
+
+    def cond(carry):
+        spent, _, _, _, accepted = carry
+        return (~jnp.all(accepted)) & (spent < max_trials)
+
+    def body(carry):
+        spent, items, mask, trials, accepted = carry
+        starts = jnp.broadcast_to(spent.astype(jnp.uint32), (n,))
+        keys = _fanout_traced(req_keys, starts, offsets)
+        it, mk, ac = _spec_round_impl(sampler, keys)
+        it = it.reshape(n, n_spec, r)
+        mk = mk.reshape(n, n_spec, r)
+        ac = ac.reshape(n, n_spec)
+        usable = jnp.minimum(jnp.asarray(n_spec, jnp.int32),
+                             max_trials - spent)
+        ac = ac & (lane[None, :] < usable)
+        any_acc = ac.any(axis=1)
+        first = jnp.argmax(ac, axis=1).astype(jnp.int32)
+        pend = ~accepted
+        newly = pend & any_acc
+        # first accepted lane, else the last in-budget lane (the exhaustion
+        # payout the host driver takes from its final round)
+        pick = jnp.where(any_acc, first, usable - 1)
+        it_p = jnp.take_along_axis(it, pick[:, None, None], axis=1)[:, 0]
+        mk_p = jnp.take_along_axis(mk, pick[:, None, None], axis=1)[:, 0]
+        items = jnp.where(pend[:, None], it_p, items)
+        mask = jnp.where(pend[:, None], mk_p, mask)
+        trials = jnp.where(newly, spent + first + 1, trials)
+        return (spent + usable, items, mask, trials, accepted | newly)
+
+    init = (
+        jnp.asarray(0, jnp.int32),
+        -jnp.ones((n, r), jnp.int32),
+        jnp.zeros((n, r), bool),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), bool),
+    )
+    _, items, mask, trials, accepted = jax.lax.while_loop(cond, body, init)
+    trials = jnp.where(accepted, trials,
+                       jnp.asarray(max_trials, jnp.int32))
+    return RejectionSample(items=items, mask=mask, trials=trials,
+                           accepted=accepted)
 
 
 def drive_rounds(
@@ -415,7 +543,12 @@ def drive_rounds(
     cur = int(n_spec)
     req_keys_h = jax.device_get(req_keys)   # one sync, outside the loop
     while active.size:
-        cur = min(cur, max_spec, max_trials - spent)
+        cur = min(cur, max_spec)
+        # budget truncation by *masking*, never by reshaping: the round
+        # keeps its power-of-two width (no fresh jit cache entry near
+        # exhaustion) and only the first ``usable`` lanes — the in-budget
+        # fold_in offsets [spent, spent+usable) — are consumed
+        usable = min(cur, max_trials - spent)
         n_act = int(active.size)
         n_pad = 1 << max(0, n_act - 1).bit_length()
         act_keys = jnp.asarray(req_keys_h[active])
@@ -430,12 +563,12 @@ def drive_rounds(
                 jnp.arange(cur, dtype=jnp.uint32),
             )
             items, mask, accept = round_fn(keys)
-        # the one designed device→host sync per round (ROADMAP item 2 is
-        # the fused megakernel that removes it); explicit so transfer
-        # guards see it as intentional
+        # the one designed device→host sync per round (the fused
+        # ``_drive_rounds_fused`` driver removes it on the default path);
+        # explicit so transfer guards see it as intentional
         with phase("harvest"):
             items_h, mask_h, acc = jax.device_get((items, mask, accept))
-        acc = acc.reshape(n_pad, cur)[:n_act]
+        acc = acc.reshape(n_pad, cur)[:n_act, :usable]
         items_h = items_h.reshape(n_pad, cur, r)[:n_act]
         mask_h = mask_h.reshape(n_pad, cur, r)[:n_act]
 
@@ -447,17 +580,17 @@ def drive_rounds(
         trials_out[hit] = spent + first[any_acc] + 1
         acc_out[hit] = True
         if observer is not None:
-            observer.on_round(n_active=n_act, n_spec=cur,
-                              proposals=n_act * cur, accepts=int(acc.sum()))
+            observer.on_round(n_active=n_act, n_spec=usable,
+                              proposals=n_act * usable, accepts=int(acc.sum()))
             for t in trials_out[hit]:
                 observer.on_retire(trials=int(t), accepted=True)
 
-        spent += cur
+        spent += usable
         miss = ~any_acc
-        if spent >= max_trials:    # exhausted: return last proposal, as
-            left = active[miss]    # the sequential sampler does
-            items_out[left] = items_h[miss, -1]
-            mask_out[left] = mask_h[miss, -1]
+        if spent >= max_trials:    # exhausted: return the last in-budget
+            left = active[miss]    # proposal, as the sequential sampler does
+            items_out[left] = items_h[miss, usable - 1]
+            mask_out[left] = mask_h[miss, usable - 1]
             trials_out[left] = spent
             if observer is not None:
                 for _ in left:

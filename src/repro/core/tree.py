@@ -444,6 +444,25 @@ def _descend_batch(
     return idx
 
 
+def _descend_score_fused(
+    tree: SampleTree, q: jax.Array, us: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused descent + leaf scoring for the unsharded hot path: one
+    kernel dispatch on TPU (``kernels.spec_round``), the bit-identical
+    jnp oracle elsewhere.  Returns (block ids (N,), raw *unclamped*
+    scores (N, block)); the caller owns the clamp and the categorical
+    draw so the PRNG stream stays outside the kernel."""
+    try:
+        from repro.kernels.spec_round import ops as _ops
+
+        return _ops.descend_score(tree.levels, tree.W, tree.block, q, us)
+    except ImportError:  # pragma: no cover - kernel package unavailable
+        blk = _descend_batch(tree, q, us)
+        blk_ar = jnp.arange(tree.block, dtype=jnp.int32)
+        rows = blk[:, None] * tree.block + blk_ar[None, :]
+        return blk, _leaf_scores_batch(tree.W[rows], q)
+
+
 def sample_elementary_batch(
     tree: SampleTree, e_masks: jax.Array, keys: jax.Array, *,
     axis_name: Optional[str] = None, m_pad_global: Optional[int] = None,
@@ -499,25 +518,36 @@ def sample_elementary_batch(
         # named scopes are compile-time HLO metadata (free at runtime);
         # names come from the repro.obs.prof.phases catalog — core stays
         # import-free of repro.obs
-        with jax.named_scope("ndpp.tree_descent"):
-            blk = _descend_batch(tree, q, us, axis_name=axis_name)  # (N,)
-        with jax.named_scope("ndpp.leaf_scoring"):
-            if not w_sharded:
-                rows = blk[:, None] * tree.block + blk_ar[None, :]  # (N, block)
-                w_blk = tree.W[rows]                                # (N, block, R)
-                scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
-            else:
-                bps = w_rows // tree.block             # blocks per shard
-                base_blk = shard * bps
-                own = (blk >= base_blk) & (blk < base_blk + bps)
-                loc = jnp.clip(blk - base_blk, 0, bps - 1)
-                rows = loc[:, None] * tree.block + blk_ar[None, :]
-                w_blk = tree.W[rows]
-                raw = jnp.where(own[:, None], _leaf_scores_batch(w_blk, q), 0.0)
-                scores = jnp.maximum(jax.lax.psum(raw, axis_name), 0.0)
-            j_local = jax.vmap(jax.random.categorical)(
-                kk[:, 1], jnp.log(scores + 1e-30)
-            )
+        if axis_name is None:
+            # unsharded hot path: descent + leaf scoring fuse into one
+            # kernel (the spec_round dispatcher applies the ndpp.* scopes)
+            blk, raw = _descend_score_fused(tree, q, us)
+            with jax.named_scope("ndpp.leaf_scoring"):
+                scores = jnp.maximum(raw, 0.0)
+                j_local = jax.vmap(jax.random.categorical)(
+                    kk[:, 1], jnp.log(scores + 1e-30)
+                )
+        else:
+            with jax.named_scope("ndpp.tree_descent"):
+                blk = _descend_batch(tree, q, us, axis_name=axis_name)  # (N,)
+            with jax.named_scope("ndpp.leaf_scoring"):
+                if not w_sharded:
+                    rows = blk[:, None] * tree.block + blk_ar[None, :]
+                    w_blk = tree.W[rows]                        # (N, block, R)
+                    scores = jnp.maximum(_leaf_scores_batch(w_blk, q), 0.0)
+                else:
+                    bps = w_rows // tree.block         # blocks per shard
+                    base_blk = shard * bps
+                    own = (blk >= base_blk) & (blk < base_blk + bps)
+                    loc = jnp.clip(blk - base_blk, 0, bps - 1)
+                    rows = loc[:, None] * tree.block + blk_ar[None, :]
+                    w_blk = tree.W[rows]
+                    raw = jnp.where(own[:, None],
+                                    _leaf_scores_batch(w_blk, q), 0.0)
+                    scores = jnp.maximum(jax.lax.psum(raw, axis_name), 0.0)
+                j_local = jax.vmap(jax.random.categorical)(
+                    kk[:, 1], jnp.log(scores + 1e-30)
+                )
         j = blk * tree.block + j_local
         w_j = _gather_row(tree.W, j,
                           axis_name if w_sharded else None)     # (N, R)

@@ -1,0 +1,70 @@
+"""jit'd public wrapper for the fused descent+score spec_round kernel.
+
+Dispatches the rejection hot path's per-round tree traversal + leaf
+scoring: the Pallas kernel on TPU (or under interpret), the pure-jnp
+oracle everywhere else.  The oracle *is* the committed CPU arithmetic —
+``core.tree.sample_elementary_batch`` routes through here, and the
+golden-file suite pins its draws bit-for-bit — so the ref path must not
+be "equivalent", it must be identical (see ref.py).
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import descend_ref, descend_score_ref, leaf_scores_ref  # noqa: F401
+from .spec_round import descend_score_pallas
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover - no backend initialized
+        return False
+
+
+def descend_score(
+    levels, W: jax.Array, block: int, q: jax.Array, us: jax.Array, *,
+    force_interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused per-round descent + leaf scoring for N proposal lanes.
+
+    levels: tuple of (2^lvl, R, R) tree node arrays (root first); W:
+    (m_pad, R) leaf rows; q: (N, R, R) conditioning projectors; us:
+    (N, depth) descent uniforms.  Returns (block ids (N,) int32, raw
+    unclamped scores (N, block) float32) — the caller owns the
+    ``maximum(., 0)`` clamp and the categorical draw, whose PRNG stream
+    must stay outside the kernel for bit-stable draws.
+    """
+    interpret = force_interpret or _INTERPRET
+    depth = len(levels) - 1
+    if depth == 0 or not (_on_tpu() or interpret):
+        with jax.named_scope("ndpp.tree_descent"):
+            blk = descend_ref(levels, q, us)
+        with jax.named_scope("ndpp.leaf_scoring"):
+            scores = leaf_scores_ref(W, block, blk, q)
+        return blk, scores
+    m, r = W.shape
+    assert m % block == 0, (m, block)
+    r_pad = (-r) % 128
+    b_pad = (-block) % 8
+    lv = jnp.concatenate([lvl.reshape(-1, r, r) for lvl in levels])
+    lvp = jnp.pad(lv.astype(jnp.float32),
+                  ((0, 0), (0, r_pad), (0, r_pad)))
+    wb = W.reshape(m // block, block, r)
+    wbp = jnp.pad(wb, ((0, 0), (0, b_pad), (0, r_pad)))
+    qp = jnp.pad(q, ((0, 0), (0, r_pad), (0, r_pad)))
+    offsets, off = [], 0
+    for lvl_arr in levels:
+        offsets.append(off)
+        off += lvl_arr.shape[0]
+    with jax.named_scope("ndpp.tree_descent"):
+        blk, sc = descend_score_pallas(
+            lvp, wbp, qp, us[:, :depth], offsets=tuple(offsets),
+            interpret=interpret)
+    return blk[:, 0], sc[:, :block]

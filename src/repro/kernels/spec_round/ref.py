@@ -1,0 +1,81 @@
+"""Pure-jnp oracle for the fused speculative-round descent+score kernel.
+
+``descend_score_ref`` is the arithmetic the CPU CI actually executes for
+the rejection hot path: it must stay expression-for-expression identical
+to the inline stages it fused (``core.tree._descend_batch``'s unsharded
+branch and the einsum of ``kernels.bilinear.ref.bilinear_batched_ref``),
+because the golden-file suite pins the sampler's draws bit-for-bit.
+Changing an op order here is a distribution change and must go through
+``--regen-golden`` review.
+"""
+import jax
+import jax.numpy as jnp
+
+from ..bilinear.ref import bilinear_batched_ref
+
+#: levels whose whole node set is scored with one stacked matmul instead
+#: of per-lane gathers — must match ``core.tree._SHALLOW_MAX`` (the plain
+#: and sharded descents classify levels by the same global node count;
+#: tests assert the two constants agree)
+_SHALLOW_MAX = 32
+
+
+def descend_ref(levels, q: jax.Array, us: jax.Array) -> jax.Array:
+    """Root-to-block traversal for N lanes in lockstep (unsharded).
+
+    levels: tuple of (2^lvl, R, R) node arrays (levels[0] is the root);
+    q: (N, R, R) conditioning projectors; us: (N, depth) uniforms.
+    Returns the chosen block index per lane (N,).  Shallow levels are
+    scored against every node with one stacked (nodes, R^2) x (R^2, N)
+    matmul; deep levels gather the left child per lane.  The parent's
+    mass is carried down (p_child = p_left or p_all - p_left).
+    """
+    n = q.shape[0]
+    r = q.shape[-1]
+    idx = jnp.zeros((n,), jnp.int32)
+    depth = len(levels) - 1
+    shallow = [lvl for lvl in range(1, depth + 1)
+               if (1 << lvl) <= _SHALLOW_MAX]
+    p_all = jnp.einsum("ij,nij->n", levels[0][0], q)
+    offs = {}
+    if shallow:
+        stacked = jnp.concatenate(
+            [levels[lvl].reshape(-1, r * r) for lvl in shallow]
+        )                                            # (sum 2^lvl, R^2)
+        all_scores = stacked @ q.reshape(n, r * r).T  # (sum 2^lvl, N)
+        off = 0
+        for lvl in shallow:
+            offs[lvl] = off
+            off += levels[lvl].shape[0]
+    for lvl in range(1, depth + 1):
+        nodes = levels[lvl]
+        if lvl in offs:
+            s_l = all_scores[offs[lvl]:offs[lvl] + nodes.shape[0]]
+            p_left = jnp.take_along_axis(s_l.T, (2 * idx)[:, None],
+                                         axis=1)[:, 0]
+        else:
+            left = nodes[2 * idx]                   # (N, R, R) gather
+            p_left = jnp.einsum("nij,nij->n", q, left)
+        go_left = us[:, lvl - 1] * jnp.maximum(p_all, 1e-30) \
+            <= jnp.maximum(p_left, 0.0)
+        idx = 2 * idx + jnp.where(go_left, 0, 1)
+        p_all = jnp.maximum(jnp.where(go_left, p_left, p_all - p_left), 0.0)
+    return idx
+
+
+def leaf_scores_ref(W: jax.Array, block: int, blk: jax.Array,
+                    q: jax.Array) -> jax.Array:
+    """Raw (unclamped) leaf-block scores: gather each lane's (block, R)
+    leaf rows of W and bilinear-score them against the lane's projector —
+    the einsum of ``bilinear_batched_ref``, byte for byte."""
+    blk_ar = jnp.arange(block, dtype=jnp.int32)
+    rows = blk[:, None] * block + blk_ar[None, :]   # (N, block)
+    w_blk = W[rows]                                  # (N, block, R)
+    return bilinear_batched_ref(w_blk, q)
+
+
+def descend_score_ref(levels, W: jax.Array, block: int, q: jax.Array,
+                      us: jax.Array):
+    """Fused oracle: (chosen block indices (N,), raw scores (N, block))."""
+    blk = descend_ref(levels, q, us)
+    return blk, leaf_scores_ref(W, block, blk, q)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused tree descent + leaf scoring for one
+speculative-round lane.
+
+One grid step owns one proposal lane: it walks the flat level-indexed
+tree root-to-leaf against the lane's (R, R) conditioning projector and
+then bilinear-scores the chosen leaf block's rows — the two stages the
+XLA path dispatches as a stacked matmul + gather chain fuse into a
+single VMEM-resident program, so the (depth+block) x R^2 working set is
+read from HBM exactly once per lane (``benchmarks/roofline.py``'s
+``tree_descent``/``leaf_scoring`` arithmetic intensities are the
+target).  The whole stacked level array and the blocked W reshape stay
+VMEM-resident per grid step, which bounds the kernel to trees of
+(2M/block) R^2 + M R floats — the serving-engine regime; larger
+catalogs shard the item axis first (``core.tree`` sharded path) and
+never reach this kernel.
+
+Grid: (n_lanes,).  R is lane-padded to 128 and block sublane-padded to 8
+by the ops.py wrapper; ``level_offsets`` (static) locate each level in
+the stacked node array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _descend_score_kernel(lv_ref, wb_ref, q_ref, us_ref, blk_ref, sc_ref, *,
+                          offsets, n_blocks):
+    q = q_ref[0].astype(jnp.float32)                 # (R, R)
+    root = lv_ref[0].astype(jnp.float32)
+    p_all = jnp.sum(root * q)
+    idx = jnp.int32(0)
+    depth = len(offsets) - 1
+    n_nodes = sum(1 << lvl for lvl in range(depth + 1))
+    for lvl in range(1, depth + 1):
+        # left child of node idx at level lvl-1; clamped so the load stays
+        # in bounds even on a (impossible by construction) corrupt index
+        base = jnp.minimum(offsets[lvl] + 2 * idx, n_nodes - 1)
+        left = pl.load(lv_ref, (pl.ds(base, 1), slice(None), slice(None)))
+        p_left = jnp.sum(left[0].astype(jnp.float32) * q)
+        go_left = us_ref[0, lvl - 1] * jnp.maximum(p_all, 1e-30) \
+            <= jnp.maximum(p_left, 0.0)
+        idx = 2 * idx + jnp.where(go_left, 0, 1)
+        p_all = jnp.maximum(jnp.where(go_left, p_left, p_all - p_left), 0.0)
+    blk = jnp.minimum(idx, n_blocks - 1)
+    w_blk = pl.load(wb_ref, (pl.ds(blk, 1), slice(None), slice(None)))
+    zf = w_blk[0].astype(jnp.float32)                # (block_pad, R)
+    zq = jnp.dot(zf, q, preferred_element_type=jnp.float32)
+    blk_ref[0, 0] = idx
+    sc_ref[0] = jnp.sum(zq * zf, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "interpret"))
+def descend_score_pallas(
+    levels_flat: jax.Array, w_blocked: jax.Array, q: jax.Array,
+    us: jax.Array, *, offsets, interpret: bool = False,
+):
+    """levels_flat: (sum 2^lvl, R, R) stacked levels (root first);
+    w_blocked: (n_blocks, block_pad, R) leaf-blocked rows; q: (N, R, R);
+    us: (N, depth).  Returns ((N, 1) int32 block ids, (N, block_pad)
+    float32 raw scores)."""
+    n = q.shape[0]
+    l_tot, r, _ = levels_flat.shape
+    n_blocks, block_pad, _ = w_blocked.shape
+    depth = len(offsets) - 1
+    kernel = functools.partial(_descend_score_kernel, offsets=offsets,
+                               n_blocks=n_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((l_tot, r, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_blocks, block_pad, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, r, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, depth), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_pad), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n, block_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(levels_flat, w_blocked, q, us)

@@ -24,10 +24,11 @@ The accounting identities (the engine's structure makes them exact):
     per-tick sync; :meth:`Accountant.device_get` wraps it and sums the
     ``.nbytes`` of the fetched numpy leaves into ``direction="d2h"``.
 
-``ndpp_dispatches_total`` per tick is the number ROADMAP item 1's fused
-megakernel must drive to 1; the strict-mode tests in
-tests/test_compile_cache.py pin today's exact per-tick values for both
-backends so any change — regression or fusion win — is loud.
+``ndpp_dispatches_total`` per tick is the number this observatory was
+built to police: it exposed the pre-fusion rejection tick as 2 launches
+plus a spec-id upload, and now pins the fused ``_spec_round_fused``
+tick at exactly 1 (tests/test_compile_cache.py, strict mode) so any
+change — regression or further fusion — is loud.
 
 A shared :data:`NULL_ACCOUNTANT` with the same interface serves the
 uninstrumented engine path, so engine code is uniform and the bare

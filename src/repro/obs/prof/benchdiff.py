@@ -172,6 +172,19 @@ def main(argv=None) -> int:
         failed = False
         for path in args.files:
             errors, warnings = schema.validate_file(path)
+            # a committed artifact stamped git_dirty was measured from an
+            # uncommitted tree: its numbers are not attributable to any
+            # commit, so validation hard-fails it (regenerate from a
+            # clean checkout; the writers stamp provenance once, before
+            # the first artifact write)
+            try:
+                if _load(path).get("meta", {}).get("git_dirty") is True:
+                    errors = list(errors) + [
+                        f"{path}: meta.git_dirty is true — artifact was "
+                        f"measured from an uncommitted tree; regenerate "
+                        f"from a clean checkout"]
+            except (OSError, json.JSONDecodeError):
+                pass  # unreadable files already failed schema validation
             for e in errors:
                 print(f"FAIL  {e}")
             for w in warnings:

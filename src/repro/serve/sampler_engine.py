@@ -6,9 +6,11 @@ the same pattern to the paper's samplers.
 
 ``backend="rejection"`` (default): a fixed pool of ``n_slots`` sampling
 requests shares ONE jitted speculative round per tick — every occupied slot
-contributes ``n_spec`` i.i.d. proposals to a single batched tree traversal
-+ batched log-det ratio (``core.rejection._spec_round``).  A slot retires
-at its first accepted proposal.
+contributes ``n_spec`` i.i.d. proposals to a single fused dispatch that
+traces the per-slot ``fold_in`` key fan-out, the batched tree traversal,
+and the batched log-det ratio into one jit
+(``core.rejection._spec_round_fused``).  A slot retires at its first
+accepted proposal.
 
 ``backend="mcmc"``: slot = chain.  Every occupied slot is an independent
 up/down (or fixed-size swap) Metropolis chain (``core.mcmc``); one jitted
@@ -40,6 +42,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import warnings
 from typing import Dict, List, Optional, Union
 
@@ -50,15 +53,14 @@ from jax.sharding import Mesh
 
 from repro.core import mcmc as mcmc_core
 from repro.core.dynamic import (
-    _spec_round_dual,
-    _spec_round_dual_sharded,
+    _spec_round_dual_fused,
+    _spec_round_dual_fused_sharded,
     auto_n_spec_dynamic,
 )
 from repro.core.rejection import (
     NDPPSampler,
-    _fanout_keys,
-    _spec_round,
-    _spec_round_sharded,
+    _spec_round_fused,
+    _spec_round_fused_sharded,
     auto_n_spec,
     shard_sampler,
 )
@@ -88,17 +90,55 @@ class TickBudgetExhausted(RuntimeError):
         self.queued = queued
 
 
+#: set once the device-key fallback has warned — the extra admission
+#: dispatch should be visible exactly once per process, not per request
+_DEVICE_KEY_WARNED = False
+
+
+@functools.lru_cache(maxsize=None)
+def _device_prng_key(impl: str, seed: int) -> np.ndarray:
+    """Device-built raw key for PRNG impls with no host-side layout.
+
+    One dispatch per *distinct* (impl, seed), cached for the process —
+    re-admitting a seed is free — with a one-time ``RuntimeWarning`` so
+    the per-admission dispatch never hides from a profile.  (``impl`` is
+    a cache-key argument because the active default impl can change
+    between calls under ``jax.default_prng_impl``.)
+    """
+    global _DEVICE_KEY_WARNED
+    if not _DEVICE_KEY_WARNED:
+        _DEVICE_KEY_WARNED = True
+        warnings.warn(
+            f"jax_default_prng_impl={impl!r} has no host-side key "
+            f"construction: admission builds request keys on device (one "
+            f"cached dispatch per distinct seed)",
+            RuntimeWarning, stacklevel=3)
+    return jax.device_get(jax.random.PRNGKey(seed))
+
+
+def _prng_key_words() -> int:
+    """uint32 words in a raw key of the active default PRNG impl (the
+    engine's ``slot_key`` row width)."""
+    impl = str(jax.config.jax_default_prng_impl)
+    if impl == "threefry2x32":
+        return 2
+    if impl in ("rbg", "unsafe_rbg"):
+        return 4
+    return int(_device_prng_key(impl, 0).shape[0])
+
+
 def _host_prng_key(seed: int) -> np.ndarray:
-    """uint32[2] key bit-identical to ``jax.random.PRNGKey(seed)``.
+    """Raw uint32 key bit-identical to ``jax.random.PRNGKey(seed)``.
 
     Admission runs inside the tick loop, and building the key on device
     dispatches a scalar convert kernel per request (which recompiles on
     every call under ``jax_check_tracer_leaks``).  The threefry2x32 seed
-    layout is just the 64-bit seed split into two uint32 words, so build
-    it on host; fall back to the device path for non-default PRNG impls.
+    layout is just the 64-bit seed split into two uint32 words, and the
+    rbg/unsafe_rbg layout is that halfkey tiled twice, so build those on
+    host; any other impl falls back to a cached, warned device build
+    (``_device_prng_key``) instead of silently dispatching per admission.
     """
-    if jax.config.jax_default_prng_impl != "threefry2x32":  # pragma: no cover
-        return jax.device_get(jax.random.PRNGKey(seed))
+    impl = str(jax.config.jax_default_prng_impl)
     s = int(seed)
     if jax.config.jax_enable_x64:
         # threefry_seed: hi = shift_right_logical(seed, 32), lo = low word
@@ -107,7 +147,13 @@ def _host_prng_key(seed: int) -> np.ndarray:
         # the seed is canonicalized to int32 first, and a logical shift of
         # a 32-bit value by 32 is zero — the hi word is always 0
         hi = 0
-    return np.array([hi, s & 0xFFFFFFFF], np.uint32)
+    half = np.array([hi, s & 0xFFFFFFFF], np.uint32)
+    if impl == "threefry2x32":
+        return half
+    if impl in ("rbg", "unsafe_rbg"):
+        # rbg_seed = concat([threefry_seed, threefry_seed]): [hi,lo,hi,lo]
+        return np.concatenate([half, half])
+    return _device_prng_key(impl, s)
 
 
 @dataclasses.dataclass
@@ -285,7 +331,7 @@ class SamplerEngine:
                 lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape), init)
         self.queue: List[SampleRequest] = []
         self.slot_req: List[Optional[SampleRequest]] = [None] * n_slots
-        self.slot_key = np.zeros((n_slots, 2), np.uint32)
+        self.slot_key = np.zeros((n_slots, _prng_key_words()), np.uint32)
         self.slot_trials = np.zeros(n_slots, np.int64)
         # catalog mode: the CatalogState each in-flight request samples
         # from — pinned at admission, released at retire
@@ -554,7 +600,12 @@ class SamplerEngine:
         return True
 
     def _step_rejection(self) -> bool:
-        """One speculative rejection round for the whole pool.
+        """One speculative rejection round for the whole pool — a single
+        fused dispatch per round: the per-slot ``fold_in`` key fan-out,
+        tree descent + leaf scoring, and the bilinear log-det ratio are
+        all traced into one jit (``core.rejection._spec_round_fused``),
+        so the steady-state tick costs exactly one dispatch plus the one
+        designed harvest ``device_get``.
 
         Catalog mode runs one round per *distinct pinned catalog version*
         among the occupied slots (at most the number of swaps in flight,
@@ -568,13 +619,12 @@ class SamplerEngine:
         if all(r is None for r in self.slot_req):
             return False
         self.ticks += 1
-        keys = None
         # operands cross the jit boundary as host numpy arrays: op-by-op
         # jnp conversions would dispatch (and, under
-        # jax_check_tracer_leaks, recompile) tiny convert/iota kernels
-        # on every tick
+        # jax_check_tracer_leaks, recompile) tiny convert/iota kernels on
+        # every tick.  The per-slot spec offsets are a traced arange
+        # *inside* the fused round, so they never cross the boundary.
         trials_host = np.asarray(self.slot_trials, np.uint32)
-        spec_ids = np.arange(self.n_spec, dtype=np.uint32)
         if self._cat is None:
             slot_groups = [(None, [s for s in range(self.n_slots)
                                    if self.slot_req[s] is not None])]
@@ -589,30 +639,33 @@ class SamplerEngine:
                 ((self.slot_pin[ss[0]], ss) for ss in by_pin.values()),
                 key=lambda g: g[0].version)
         for pin, slots in slot_groups:
-            # exactly one round_dispatch phase span per speculative round;
-            # the pool-wide key fan-out rides in the first round's span
+            # exactly one dispatch per speculative round: fan-out, round
+            # body, and accept test ride in the same jit
             with self._phase(prof_phases.ROUND_DISPATCH):
-                if keys is None:
-                    keys = self._acct.call(
-                        "_fanout_keys", _fanout_keys,
-                        self.slot_key, trials_host, spec_ids)
                 if pin is None:
                     items, mask, accept = (
-                        self._acct.call("_spec_round", _spec_round,
-                                        self.sampler, keys)
+                        self._acct.call(
+                            "_spec_round_fused", _spec_round_fused,
+                            self.sampler, self.slot_key, trials_host,
+                            n_spec=self.n_spec)
                         if self.mesh is None
                         else self._acct.call(
-                            "_spec_round_sharded", _spec_round_sharded,
-                            self.sampler, keys, self.mesh))
+                            "_spec_round_fused_sharded",
+                            _spec_round_fused_sharded,
+                            self.sampler, self.slot_key, trials_host,
+                            self.mesh, n_spec=self.n_spec))
                 else:
                     items, mask, accept = (
-                        self._acct.call("_spec_round_dual", _spec_round_dual,
-                                        pin.proposal, pin.sp, keys)
+                        self._acct.call(
+                            "_spec_round_dual_fused", _spec_round_dual_fused,
+                            pin.proposal, pin.sp, self.slot_key, trials_host,
+                            n_spec=self.n_spec)
                         if self.mesh is None
                         else self._acct.call(
-                            "_spec_round_dual_sharded",
-                            _spec_round_dual_sharded,
-                            pin.proposal, pin.sp, keys, self.mesh))
+                            "_spec_round_dual_fused_sharded",
+                            _spec_round_dual_fused_sharded,
+                            pin.proposal, pin.sp, self.slot_key, trials_host,
+                            self.mesh, n_spec=self.n_spec))
             self._harvest(slots, items, mask, accept)
         return True
 

@@ -1,0 +1,28 @@
+"""Fixture: NDPP304 — a Python round loop dispatching a module-local
+jitted round function per iteration (one host→device launch round-trip
+per round instead of one for the whole schedule)."""
+import functools
+
+import jax
+
+
+@jax.jit
+def fanout(keys):
+    return keys
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def spec_round(keys, *, n):
+    return keys[:n]
+
+
+advance = jax.jit(lambda s: s + 1)
+
+
+def drive(keys, n_rounds):
+    state = 0
+    for _ in range(n_rounds):
+        ks = fanout(keys)  # EXPECT: NDPP304
+        keys = spec_round(ks, n=4)  # EXPECT: NDPP304
+        state = advance(state)  # EXPECT: NDPP304
+    return state

@@ -1,0 +1,32 @@
+"""Clean twin of ndpp304_bad: the round loop is traced on device
+(lax.while_loop inside ONE jit), and a jitted helper called from inside
+another traced function inlines instead of dispatching."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fanout(keys):
+    return keys
+
+
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def drive_fused(keys, *, n_rounds):
+    # the whole round schedule is one dispatch: the loop is a traced
+    # lax.while_loop, and the jitted fanout inlines into this trace
+    def body(state):
+        t, ks = state
+        return t + 1, fanout(ks)
+
+    def cond(state):
+        return state[0] < n_rounds
+
+    _, out = jax.lax.while_loop(cond, body, (jnp.int32(0), keys))
+    return out
+
+
+def warmup(keys):
+    # a single un-looped dispatch is fine
+    return fanout(keys)

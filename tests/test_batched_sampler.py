@@ -96,6 +96,63 @@ def test_batched_trials_match_expected_ondpp():
     )
 
 
+class _NullObserver:
+    """Minimal duck-typed telemetry sink: forces sample_batched_many onto
+    the host ``drive_rounds`` driver without recording anything."""
+
+    def on_round(self, **kw):
+        pass
+
+    def on_retire(self, **kw):
+        pass
+
+
+def test_fused_driver_matches_python_driver(sampler):
+    """The device-resident lax.while_loop driver and the host drive_rounds
+    loop are bit-identical — items, masks, trial counts, and accept flags —
+    including exhausted requests (the last-in-budget payout) and a
+    max_trials that is not a multiple of any round width."""
+    key = jax.random.PRNGKey(42)
+    fused = sample_batched_many(sampler, key, 64, n_spec=4, max_trials=10)
+    host = sample_batched_many(sampler, key, 64, n_spec=4, max_trials=10,
+                               observer=_NullObserver())
+    assert np.array_equal(np.asarray(fused.items), np.asarray(host.items))
+    assert np.array_equal(np.asarray(fused.mask), np.asarray(host.mask))
+    assert np.array_equal(np.asarray(fused.trials), np.asarray(host.trials))
+    assert np.array_equal(np.asarray(fused.accepted),
+                          np.asarray(host.accepted))
+
+
+def test_drive_rounds_truncation_keeps_pow2_shapes(sampler):
+    """Budget truncation masks lanes instead of reshaping: every round
+    dispatch keeps its power-of-two width even when the remaining budget
+    is smaller than the doubled round (no fresh jit cache entry near
+    exhaustion), and the draws still match the fused driver."""
+    from repro.core.rejection import _spec_round, drive_rounds
+
+    widths = []
+
+    def round_fn(keys):
+        widths.append(int(keys.shape[0]))
+        return _spec_round(sampler, keys)
+
+    req = jax.random.split(jax.random.PRNGKey(5), 6)
+    # max_trials=10: after rounds of 4 the doubled round of 8 has only 6
+    # in-budget lanes — the dispatch must still be 8 wide
+    res = drive_rounds(round_fn, req, sampler.tree.R, n_spec=4,
+                       max_trials=10)
+    assert widths, "no rounds dispatched"
+    assert len(widths) >= 2, widths   # the truncated round must occur
+    for w in widths:
+        assert w & (w - 1) == 0, (w, widths)
+    base = sample_batched_many(sampler, req, n_spec=4, max_trials=10,
+                               split_keys=False)
+    assert np.array_equal(np.asarray(res.items), np.asarray(base.items))
+    assert np.array_equal(np.asarray(res.trials), np.asarray(base.trials))
+    assert np.array_equal(np.asarray(res.accepted),
+                          np.asarray(base.accepted))
+
+
 def test_single_request_speculative(sampler):
     """sample_batched (one request, doubling rounds) returns a valid draw
     with trials counted in proposal order."""

@@ -193,9 +193,10 @@ def test_profile_instrumented_engine_compiles_once(sampler):
 
 
 def test_rejection_per_tick_accounting_pinned(sampler):
-    """Steady-state rejection tick = exactly 2 launches (key fan-out +
-    speculative round), 64 h2d bytes (slot keys 4x8 + trials 4x4 +
-    spec ids 4x4, all uint32), 656 d2h bytes (items (4,4,8) i32 = 512 +
+    """Steady-state rejection tick = exactly ONE launch (the fused
+    fan-out + speculative round; the spec-id offsets are a traced arange
+    and no longer cross the boundary), 48 h2d bytes (slot keys 4x8 +
+    trials 4x4, all uint32), 656 d2h bytes (items (4,4,8) i32 = 512 +
     mask (4,4,8) bool = 128 + accept (4,4) bool = 16)."""
     from repro.obs import Telemetry
 
@@ -207,13 +208,13 @@ def test_rejection_per_tick_accounting_pinned(sampler):
     for _ in range(10):
         with eng._acct.measure() as m:
             assert eng.step()
-        assert m.dispatches == {"_fanout_keys": 1, "_spec_round": 1}
-        assert m.h2d_bytes == 64
+        assert m.dispatches == {"_spec_round_fused": 1}
+        assert m.h2d_bytes == 48
         assert m.d2h_bytes == 656
     # the registry-level counters carry the same totals, labelled
     reg = tel.registry
     assert reg.get("ndpp_dispatches_total").value(
-        backend="rejection", fn="_spec_round") == 11
+        backend="rejection", fn="_spec_round_fused") == 11
     assert reg.get("ndpp_transfer_bytes_total").value(
         backend="rejection", direction="d2h") == 11 * 656
 
@@ -239,3 +240,111 @@ def test_mcmc_per_tick_accounting_pinned(sampler):
         assert m.d2h_bytes == 2624
     assert tel.registry.get("ndpp_dispatches_total").value(
         backend="mcmc", fn="run_chains") == 11
+
+
+# ---------------------------------------------------------------- PR 10: the
+# admission path builds request keys on the HOST — a per-admission device
+# dispatch would shred the one-dispatch-per-tick property the fused round
+# just bought.  The construction must track jax_default_prng_impl.
+
+def test_host_prng_key_matches_default_impl():
+    """Under the default threefry impl, _host_prng_key is byte-for-byte
+    jax.random.PRNGKey without touching the device."""
+    import jax
+    from repro.serve.sampler_engine import _host_prng_key, _prng_key_words
+
+    assert _prng_key_words() == 2
+    for seed in (0, 1, 7, 123456789, 2**31 - 1):
+        np.testing.assert_array_equal(
+            _host_prng_key(seed), jax.device_get(jax.random.PRNGKey(seed)))
+
+
+def test_device_key_fallback_warns_and_caches():
+    """An impl with no host-side construction falls back to ONE cached
+    device dispatch per distinct seed — warned on first use, silent and
+    cache-served after."""
+    import warnings
+
+    import jax
+    from repro.serve import sampler_engine as se
+
+    se._device_prng_key.cache_clear()
+    se._DEVICE_KEY_WARNED = False
+    with pytest.warns(RuntimeWarning, match="on device"):
+        k = se._device_prng_key("threefry2x32", 5)
+    np.testing.assert_array_equal(k, jax.device_get(jax.random.PRNGKey(5)))
+    before = se._device_prng_key.cache_info().hits
+    k2 = se._device_prng_key("threefry2x32", 5)
+    assert se._device_prng_key.cache_info().hits == before + 1
+    np.testing.assert_array_equal(k, k2)
+    with warnings.catch_warnings():     # repeat use never re-warns
+        warnings.simplefilter("error")
+        se._device_prng_key("threefry2x32", 6)
+
+
+def test_engine_rbg_prng_subprocess():
+    """Satellite regression: under ``jax_default_prng_impl=rbg`` admission
+    still builds request keys host-side (4 uint32 words, bit-equal to
+    jax.random.PRNGKey) and the steady-state tick stays ONE dispatch with
+    the widened 80-byte upload (4 slots x 16-byte rbg keys + trials).
+    ``unsafe_rbg`` keys are checked in the same process."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.update(
+        JAX_DEFAULT_PRNG_IMPL="rbg",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(root, "src")]
+            + ([p] if (p := env.get("PYTHONPATH")) else [])),
+    )
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import preprocess
+        from repro.obs import Telemetry
+        from repro.serve.sampler_engine import (
+            SampleRequest, SamplerEngine, _host_prng_key, _prng_key_words)
+
+        assert str(jax.config.jax_default_prng_impl) == "rbg"
+        assert _prng_key_words() == 4
+        for seed in (0, 1, 7, 123456789, 2**31 - 1):
+            np.testing.assert_array_equal(
+                _host_prng_key(seed),
+                jax.device_get(jax.random.PRNGKey(seed)))
+
+        rng = np.random.default_rng(0)
+        v = jnp.asarray(rng.normal(size=(8, 4)) * 0.6, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(8, 4)) * 0.6, jnp.float32)
+        d = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+        sampler = preprocess(v, b, d, block=2)
+        eng = SamplerEngine(sampler, n_slots=4, n_spec=4,
+                            telemetry=Telemetry())
+        assert eng.slot_key.shape == (4, 4), eng.slot_key.shape
+        for i in range(50):
+            eng.submit(SampleRequest(rid=i, seed=i))
+        eng.step()
+        for _ in range(5):
+            with eng._acct.measure() as m:
+                assert eng.step()
+            assert m.dispatches == {"_spec_round_fused": 1}, m.dispatches
+            assert m.h2d_bytes == 80, m.h2d_bytes
+            assert m.d2h_bytes == 656, m.d2h_bytes
+        while len(eng.finished) < 50:
+            assert eng.step()
+        assert all(eng.finished[r].accepted for r in eng.finished)
+
+        jax.config.update("jax_default_prng_impl", "unsafe_rbg")
+        for seed in (0, 3, 999):
+            np.testing.assert_array_equal(
+                _host_prng_key(seed),
+                jax.device_get(jax.random.PRNGKey(seed)))
+        print("RBG-OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", script], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+    assert "RBG-OK" in proc.stdout

@@ -10,6 +10,8 @@ from repro.kernels.bilinear import ops as bops
 from repro.kernels.bilinear.ref import bilinear_batched_ref, bilinear_ref
 from repro.kernels.mcmc_score import ops as mops
 from repro.kernels.mcmc_score.ref import score_all_ref
+from repro.kernels.spec_round import ops as spops
+from repro.kernels.spec_round.ref import descend_score_ref
 from repro.kernels.ssd import ops as sops
 from repro.kernels.ssd.ref import ssd_ref
 from repro.kernels.tree_sum import ops as tops
@@ -82,6 +84,50 @@ def test_gathered_block_grams(rng, m, blk, r, nb):
     full = block_outer_sums_ref(w, blk)
     np.testing.assert_allclose(np.asarray(ref), np.asarray(full[blks]),
                                rtol=0, atol=0)
+
+
+def _random_tree_levels(rng, depth, r):
+    """A mass-consistent proposal tree: random PSD leaf nodes, parents the
+    sum of their children — so the descent's p_left / p_all - p_left
+    carry-down walks real masses, not arbitrary numbers."""
+    leaves = rng.normal(size=(1 << depth, r, r)).astype(np.float32)
+    nodes = jnp.asarray(np.einsum("nik,njk->nij", leaves, leaves))
+    levels = [nodes]
+    for _ in range(depth):
+        nodes = nodes.reshape(-1, 2, r, r).sum(axis=1)
+        levels.append(nodes)
+    return tuple(reversed(levels))
+
+
+@pytest.mark.parametrize("depth,block,r,n", [(3, 4, 8, 5), (5, 8, 16, 12),
+                                             (6, 2, 40, 3), (2, 8, 130, 4)])
+def test_spec_round_descend_score(depth, block, r, n):
+    """Fused descent+score megakernel (interpret mode) vs the jnp oracle:
+    identical block choices, matching raw leaf scores.  Spans shallow-only
+    trees (depth <= 5 under _SHALLOW_MAX=32) and deep per-lane gathers."""
+    rng = np.random.default_rng(depth * 1000 + block * 100 + r)
+    levels = _random_tree_levels(rng, depth, r)
+    m = (1 << depth) * block
+    w = jnp.asarray(rng.normal(size=(m, r)), jnp.float32)
+    qh = rng.normal(size=(n, r, r)).astype(np.float32)
+    q = jnp.asarray(np.einsum("nik,njk->nij", qh, qh) / r)
+    us = jnp.asarray(rng.uniform(size=(n, depth)), jnp.float32)
+    blk, sc = spops.descend_score(levels, w, block, q, us,
+                                  force_interpret=True)
+    blk_ref, sc_ref = descend_score_ref(levels, w, block, q, us)
+    np.testing.assert_array_equal(np.asarray(blk), np.asarray(blk_ref))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref),
+                               rtol=1e-4, atol=1e-4 * max(1, r))
+
+
+def test_spec_round_shallow_max_matches_tree():
+    """The oracle's shallow/deep level classifier must agree with
+    core.tree's, or the fused path and the sharded descent would walk the
+    same tree with different stacked-matmul layouts."""
+    from repro.core import tree as core_tree
+    from repro.kernels.spec_round import ref as spref
+
+    assert spref._SHALLOW_MAX == core_tree._SHALLOW_MAX
 
 
 @pytest.mark.parametrize(

@@ -292,6 +292,10 @@ def test_committed_bench_files_validate():
             continue
         errors, _ = schema.validate_file(str(path))
         assert errors == [], f"{name}: {errors}"
+        # the full --validate gate also hard-fails dirty provenance: a
+        # committed artifact must come from a clean checkout
+        assert benchdiff.main(["--validate", str(path)]) == 0, (
+            f"{name} failed benchdiff --validate (dirty git stamp?)")
 
 
 # ---------------------------------------------------------------- benchdiff
@@ -368,3 +372,23 @@ def test_benchdiff_cli_end_to_end(tmp_path, capsys):
     assert benchdiff.main(["--validate", str(bad)]) == 1
     with pytest.raises(SystemExit):
         benchdiff.main([str(base_p)])          # diff needs exactly 2 files
+
+
+def test_benchdiff_validate_fails_dirty_stamp(tmp_path, capsys):
+    """An artifact stamped ``git_dirty: true`` was measured from an
+    uncommitted tree — ``--validate`` must hard-fail it.  (Regression
+    for the bug where the bench stamped provenance at dump time, so the
+    first artifact write dirtied the tree for the second and every
+    committed file carried a dirty stamp.)"""
+    clean = _bench_payload()
+    dirty = json.loads(json.dumps(clean))
+    dirty["meta"]["git_dirty"] = True
+    clean_p, dirty_p = tmp_path / "clean.json", tmp_path / "dirty.json"
+    clean_p.write_text(json.dumps(clean))
+    dirty_p.write_text(json.dumps(dirty))
+    assert benchdiff.main(["--validate", str(clean_p)]) == 0
+    assert benchdiff.main(["--validate", str(clean_p), str(dirty_p)]) == 1
+    out = capsys.readouterr().out
+    assert "git_dirty" in out and "uncommitted" in out
+    # diff mode is unaffected: provenance is a validation property
+    assert benchdiff.main([str(clean_p), str(dirty_p)]) == 0
