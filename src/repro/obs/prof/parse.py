@@ -18,7 +18,12 @@ three event families the observatory cares about:
 per-host-phase wall time, per-device-scope busy time (via the
 ``jax.named_scope`` metadata join of :func:`hlo_scope_map`), dispatch
 counts per jitted function, and the host-gap fraction — tick wall time
-the device spent idle between dispatches, ROADMAP item 1's quantity.
+the device spent idle between dispatches.  Device-busy time is the
+union of executor ``Execute`` spans *and* per-HLO-op spans, clipped to
+tick ranges: an async runtime (the fused one-dispatch tick on TFRT CPU)
+returns from ``Execute`` while the ops still run on pool threads, so
+counting only the launch markers would charge real compute to the host
+gap — the exact misattribution the fused hot path exposed.
 
 Everything here is stdlib-only host code: parsing a committed fixture
 trace needs no profiler and no device.
@@ -166,7 +171,7 @@ class AttributionReport:
     n_ticks: int
     rounds: int
     wall_us: float                      # Σ tick-span wall time
-    device_busy_us: float               # union of executable spans in ticks
+    device_busy_us: float               # union of exec + HLO-op spans in ticks
     host_gap_us: float                  # wall − busy: device idle in-tick
     host_gap_frac: float
     phases: Dict[str, dict]             # host phase → {count, wall_us}
@@ -249,6 +254,10 @@ def attribute(events: Iterable[dict],
             rec = device_acc.setdefault(scope, {"ops": 0, "busy_us": 0.0})
             rec["ops"] += 1
             rec["busy_us"] += t1 - t0
+            # HLO ops join the busy union: an async executor returns
+            # from Execute while ops still run on pool threads, so the
+            # launch markers alone undercount a one-dispatch tick
+            exec_spans.append((t0, t1))
 
     wall = _union_us(tick_spans)
     if tick_spans:

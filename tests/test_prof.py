@@ -122,6 +122,35 @@ def test_attribute_exact_fixture_numbers():
     assert "dispatches/tick=2.00" in table and "harvest" in table
 
 
+def test_hlo_ops_outside_exec_spans_join_busy_union():
+    """Async-runtime busy accounting (the fused-tick misattribution).
+
+    On TFRT CPU the fused one-dispatch tick's ``Execute`` returns while
+    the ops still run on pool threads, so per-HLO-op spans must count
+    toward device busy even when no launch marker covers them — else
+    real compute is charged to the host gap.
+    """
+    events = [
+        {"ph": "X", "name": "ndpp_engine_tick/rejection",
+         "ts": 0, "dur": 1000, "tid": 1},
+        # the launch marker covers only the dispatch itself...
+        {"ph": "X", "name": "TfrtCpuExecutable::Execute",
+         "ts": 100, "dur": 50, "tid": 2},
+        # ...the ops run after it returned, on pool threads; the two
+        # overlap so the union must dedupe them
+        {"ph": "X", "name": "fusion.1", "ts": 200, "dur": 300, "tid": 3,
+         "args": {"hlo_module": "m", "hlo_op": "fusion.1"}},
+        {"ph": "X", "name": "dot.2", "ts": 400, "dur": 200, "tid": 4,
+         "args": {"hlo_module": "m", "hlo_op": "dot.2"}},
+    ]
+    rep = attribute(events)
+    # busy = |[100,150] U [200,500] U [400,600]| = 50 + 400 = 450
+    assert rep.device_busy_us == 450.0
+    assert rep.host_gap_us == 550.0
+    assert rep.host_gap_frac == pytest.approx(0.55)
+    assert rep.device == {"unattributed": {"ops": 2, "busy_us": 500.0}}
+
+
 def test_attribute_degrades_without_scope_maps():
     rep = attribute(load_trace(str(TRACE)))
     assert rep.device == {"unattributed": {"ops": 4, "busy_us": 140.0}}
