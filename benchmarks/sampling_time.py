@@ -969,6 +969,31 @@ if __name__ == "__main__":
                 f"{flags} "
                 f"--xla_force_host_platform_device_count={args.devices}"
             ).strip()
+    def _git_meta():
+        """Git provenance for BENCH meta blocks: every committed bench
+        row becomes attributable to a commit (+ a dirty flag so numbers
+        from uncommitted trees are labelled as such)."""
+        import subprocess
+        try:
+            head = subprocess.run(["git", "rev-parse", "HEAD"],
+                                  capture_output=True, text=True, timeout=10)
+            if head.returncode != 0:
+                return {}
+            stat = subprocess.run(["git", "status", "--porcelain"],
+                                  capture_output=True, text=True, timeout=10)
+            return {"git_commit": head.stdout.strip(),
+                    "git_dirty": (bool(stat.stdout.strip())
+                                  if stat.returncode == 0 else True)}
+        except (OSError, subprocess.SubprocessError):
+            return {}
+
+    # capture provenance ONCE, before ANY mode runs: the writers below
+    # modify tracked files, and run_profile writes its (untracked)
+    # attribution report mid-run — stamping at dump time made every
+    # artifact of a clean-tree run read as git_dirty
+    # (tools/benchdiff --validate hard-fails committed dirty stamps)
+    git_meta = _git_meta()
+
     results: Dict[str, List[Dict]] = {}
     if "latency" in modes:
         results["latency"] = run(smoke=args.smoke)
@@ -994,31 +1019,6 @@ if __name__ == "__main__":
     if "profile" in modes:
         profile_rows = run_profile(smoke=args.smoke,
                                    report_path=args.profile_report)
-
-    def _git_meta():
-        """Git provenance for BENCH meta blocks: every committed bench
-        row becomes attributable to a commit (+ a dirty flag so numbers
-        from uncommitted trees are labelled as such)."""
-        import subprocess
-        try:
-            head = subprocess.run(["git", "rev-parse", "HEAD"],
-                                  capture_output=True, text=True, timeout=10)
-            if head.returncode != 0:
-                return {}
-            stat = subprocess.run(["git", "status", "--porcelain"],
-                                  capture_output=True, text=True, timeout=10)
-            return {"git_commit": head.stdout.strip(),
-                    "git_dirty": (bool(stat.stdout.strip())
-                                  if stat.returncode == 0 else True)}
-        except (OSError, subprocess.SubprocessError):
-            return {}
-
-    # capture provenance ONCE, before the first artifact write: the two
-    # writers below each modify a tracked file, so stamping at dump time
-    # made every second artifact of a run read as git_dirty even from a
-    # perfectly clean tree (tools/benchdiff --validate now hard-fails
-    # committed artifacts carrying a dirty stamp)
-    git_meta = _git_meta()
 
     def _bench_meta():
         meta = {
